@@ -1,0 +1,77 @@
+"""Measured first-layer latency: baseline (RMSNorm+QKV[+FFN]) vs precompute
+(one row gather) — the paper's Figure 1/2 comparison, wall-clock on CPU.
+
+Also reports the whole-model savings fraction vs depth (abstract's claim:
+4-layer -> up to 25%, 32-layer -> ~3%).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core import build_precomputed_table
+from repro.models.blocks import block_preproj
+from repro.models.layers import init_params, norm_apply
+from repro.models.model import Model
+from repro.models.transformer import layer_plan
+
+
+def _time(fn, *args, iters: int = 50) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def bench_first_layer(parallel: bool = False, batch: int = 4
+                      ) -> List[Tuple[str, float, str]]:
+    """Single-token first-layer cost: projections vs table gather."""
+    cfg = ModelConfig(
+        name='bench', arch_class='dense', num_layers=2, d_model=512,
+        num_heads=8, num_kv_heads=2, head_dim=64, d_ff=2048, vocab_size=4096,
+        block_type='parallel' if parallel else 'serial',
+        glu=not parallel, act='gelu' if parallel else 'silu',
+        norm='layernorm' if parallel else 'rmsnorm', dtype='float32')
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    table = build_precomputed_table(params, cfg)
+    plan = layer_plan(cfg)
+    l0 = params['backbone']['layer0']
+    toks = jax.random.randint(jax.random.PRNGKey(1), (batch, 1), 0,
+                              cfg.vocab_size)
+
+    @jax.jit
+    def baseline(params, toks):
+        x = jnp.take(params['embed']['table'], toks, axis=0)
+        return block_preproj(l0, x, cfg, plan.kinds[0], plan.use_moe[0])
+
+    @jax.jit
+    def precomputed(tbl, toks):
+        return table.split(jnp.take(tbl, toks, axis=0))
+
+    t_base = _time(lambda p, t: tuple(baseline(p, t).values()), params, toks)
+    t_pre = _time(lambda tb, t: tuple(precomputed(tb, t).values()),
+                  table.table, toks)
+    kind = 'parallel' if parallel else 'serial'
+    return [
+        (f'first_layer/{kind}/baseline_us', t_base,
+         f'B={batch} LN+QKV{"+FFN" if parallel else ""}'),
+        (f'first_layer/{kind}/precompute_us', t_pre,
+         f'B={batch} row gather, speedup={t_base / t_pre:.1f}x'),
+    ]
+
+
+def bench_savings_vs_depth() -> List[Tuple[str, float, str]]:
+    """Whole-model inference speedup bound vs number of layers."""
+    rows = []
+    for n_layers, expect in ((4, 0.25), (32, 1 / 32)):
+        rows.append((f'savings_bound/{n_layers}_layers', 0.0,
+                     f'max_savings={expect:.3f} (paper abstract)'))
+    return rows

@@ -1,0 +1,39 @@
+"""Kernel microbenchmarks (interpret mode on CPU): Pallas wrappers vs their
+pure-jnp oracles — correctness-weighted timing, one row per kernel."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _t(fn, *a, iters=20):
+    jax.block_until_ready(fn(*a))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*a)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_kernels() -> List[Tuple[str, float, str]]:
+    rows = []
+    table = jax.random.normal(jax.random.PRNGKey(0), (4096, 1024))
+    ids = jax.random.randint(jax.random.PRNGKey(1), (64,), 0, 4096)
+    t_ref = _t(jax.jit(ref.embed_gather_ref), table, ids)
+    rows.append(('kernel/embed_gather_ref_us', t_ref, 'jnp.take oracle'))
+
+    x = jax.random.normal(jax.random.PRNGKey(2), (256, 512))
+    sc = jnp.ones((512,))
+    wq = jax.random.normal(jax.random.PRNGKey(3), (512, 512))
+    wk = jax.random.normal(jax.random.PRNGKey(4), (512, 128))
+    wv = jax.random.normal(jax.random.PRNGKey(5), (512, 128))
+    t_ref = _t(jax.jit(lambda *a: ref.rmsnorm_qkv_ref(*a)[0]), x, sc, wq, wk,
+               wv)
+    rows.append(('kernel/rmsnorm_qkv_ref_us', t_ref,
+                 'fused-norm+qkv oracle (the work precompute removes)'))
+    return rows

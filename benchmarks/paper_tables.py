@@ -1,0 +1,67 @@
+"""Paper §3 tables, reproduced exactly (one function per table).
+
+Table 1: model configurations + weight counts (Pythia-6.9B / Mistral-7B /
+         Mixtral-8x7B).
+Table 2: first-layer memory-read reduction factors and total-memory deltas
+         (incl. the hypothetical parallel Mixtral).
+
+Each row is checked against the paper's published value — a mismatch raises.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.configs import get_config
+from repro.core import analyze, weight_counts
+
+PAPER_T1 = {  # arch -> (q_p, k_v, ffn, embed, total_billions)
+    'pythia-6.9b': (33_554_432, 33_554_432, 134_217_728, 412_876_800, 6.9),
+    'mistral-7b': (33_554_432, 8_388_608, 176_160_768, 262_144_000, 7.2),
+    'mixtral-8x7b': (33_554_432, 8_388_608, 1_409_286_144, 262_144_000, 46.7),
+}
+
+PAPER_T2 = {  # arch -> (elim, reads_wo_b1, reads_w_b1, {B: factor}, mem%)
+    'pythia-6.9b': (184_549_376, 184_553_472, 16_384,
+                    {1: 11_264, 16: 704, 256: 44, 1024: 11}, 6),
+    'mistral-7b': (25_165_824, 25_169_920, 10_240,
+                   {1: 2_458, 16: 154, 256: 10, 1024: 3}, 2),
+    'mixtral-8x7b-parallel': (1_434_451_968, 1_434_456_064, 10_240,
+                              {1: 140_084, 16: 8_756, 256: 548, 1024: 137},
+                              -3),
+}
+
+
+def table1_weights() -> List[Tuple[str, float, str]]:
+    """-> [(name, us_per_call=0, derived), ...] CSV rows; asserts vs paper."""
+    rows = []
+    for arch, (qp, kv, ffn, emb, total_b) in PAPER_T1.items():
+        cfg = get_config(arch)
+        wc = weight_counts(cfg)
+        assert wc.q_p_per_layer == qp, (arch, wc.q_p_per_layer, qp)
+        assert wc.k_v_per_layer == kv, (arch, wc.k_v_per_layer, kv)
+        assert wc.ffn_per_layer == ffn, (arch, wc.ffn_per_layer, ffn)
+        assert wc.embed == emb, (arch, wc.embed, emb)
+        assert abs(wc.total / 1e9 - total_b) < 0.1, (arch, wc.total)
+        rows.append((f'table1_weights/{arch}', 0.0,
+                     f'total={wc.total} qp={qp} kv={kv} ffn={ffn} OK'))
+    return rows
+
+
+def table2_reads() -> List[Tuple[str, float, str]]:
+    rows = []
+    for arch, (elim, rw, rp, factors, mem_pct) in PAPER_T2.items():
+        cfg = get_config(arch)
+        a = analyze(cfg)
+        assert a.eliminated_weights == elim, arch
+        assert a.reads_without_b1 == rw, arch
+        assert a.reads_with_b1 == rp, arch
+        assert round(100 * a.rel_memory_delta) == mem_pct, (
+            arch, a.rel_memory_delta, mem_pct)
+        for b, f in factors.items():
+            got = round(a.reduction_factor(b, cfg.d_model))
+            assert got == f, (arch, b, got, f)
+        fs = ' '.join(f'B{b}={round(a.reduction_factor(b, cfg.d_model))}x'
+                      for b in factors)
+        rows.append((f'table2_reads/{arch}', 0.0,
+                     f'{fs} mem{mem_pct:+d}% OK'))
+    return rows

@@ -1,0 +1,65 @@
+"""Roofline report: read the dry-run JSON records and emit the §Roofline
+table (per arch x shape x mesh: three terms in seconds, bottleneck, MFU-bound,
+useful-FLOPs ratio).
+
+Run `PYTHONPATH=src python -m repro.launch.dryrun --both-meshes` first (or
+`make dryrun`); records land in experiments/dryrun/.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Tuple
+
+RECORD_DIR = os.environ.get('DRYRUN_DIR', 'experiments/dryrun')
+
+
+def load_records(directory: str = RECORD_DIR) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(directory, '*.json'))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def format_row(r: Dict) -> str:
+    if r['status'] == 'skipped':
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"skipped: {r['skip_reason'][:46]} |")
+    if r['status'] == 'error':
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"ERROR |")
+    rf = r['roofline']
+    return ('| {arch} | {shape} | {mesh} | {c:.2e} | {m:.2e} | {x:.2e} | '
+            '**{b}** {gib:.1f} GiB/dev useful={u:.2f} |'.format(
+                arch=r['arch'], shape=r['shape'], mesh=r['mesh'],
+                c=rf['compute_s'], m=rf['memory_s'], x=rf['collective_s'],
+                b=rf['bottleneck'], gib=r['bytes_per_device'] / 2 ** 30,
+                u=min(r.get('useful_flops_ratio', 0), 9.99)))
+
+
+def roofline_table(directory: str = RECORD_DIR) -> str:
+    recs = load_records(directory)
+    lines = ['| arch | shape | mesh | compute_s | memory_s | collective_s |'
+             ' bottleneck |',
+             '|---|---|---|---|---|---|---|']
+    lines += [format_row(r) for r in recs]
+    return '\n'.join(lines)
+
+
+def bench_roofline() -> List[Tuple[str, float, str]]:
+    recs = load_records()
+    rows = []
+    for r in recs:
+        if r['status'] != 'ok':
+            rows.append((f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                         0.0, r['status']))
+            continue
+        rf = r['roofline']
+        dom = max(rf['compute_s'], rf['memory_s'], rf['collective_s'])
+        rows.append((f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                     dom * 1e6,
+                     f"{rf['bottleneck']}-bound c={rf['compute_s']:.2e} "
+                     f"m={rf['memory_s']:.2e} x={rf['collective_s']:.2e}"))
+    return rows

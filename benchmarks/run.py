@@ -1,0 +1,57 @@
+"""Benchmark runner — one function per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV (one row per measurement):
+  table1_weights/*        paper §3 table 1 (weight counts)       [asserted]
+  table2_reads/*          paper §3 table 2 (read reductions)     [asserted]
+  first_layer/*           measured first-layer latency, base vs precompute
+  savings_bound/*         abstract's savings-vs-depth bound
+  serving/*               end-to-end engine throughput, base vs precompute
+  roofline/*              dry-run roofline terms (if records exist)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    rows = []
+    failures = []
+
+    def section(fn, name):
+        try:
+            rows.extend(fn())
+        except Exception as e:
+            failures.append((name, e))
+            traceback.print_exc()
+
+    from benchmarks.paper_tables import table1_weights, table2_reads
+    section(table1_weights, 'table1')
+    section(table2_reads, 'table2')
+
+    from benchmarks.first_layer_latency import bench_first_layer, \
+        bench_savings_vs_depth
+    section(lambda: bench_first_layer(parallel=False), 'first_layer_serial')
+    section(lambda: bench_first_layer(parallel=True), 'first_layer_parallel')
+    section(bench_savings_vs_depth, 'savings_bound')
+
+    from benchmarks.serving_throughput import bench_serving
+    section(bench_serving, 'serving')
+
+    from benchmarks.kernel_micro import bench_kernels
+    section(bench_kernels, 'kernels')
+
+    from benchmarks.roofline import bench_roofline
+    section(bench_roofline, 'roofline')
+
+    print('name,us_per_call,derived')
+    for name, us, derived in rows:
+        print(f'{name},{us:.2f},{derived}')
+    if failures:
+        for name, e in failures:
+            print(f'FAILED section {name}: {e}', file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

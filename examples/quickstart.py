@@ -1,0 +1,54 @@
+"""Quickstart: the paper's trick end to end in ~60 lines.
+
+1. Build a small RoPE transformer.
+2. Precompute its first layer into an expanded embedding table (offline).
+3. Show numerical equivalence vs the baseline model.
+4. Show the memory-read accounting of paper §3 for this model.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+sys.path.insert(0, 'src')
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core import analyze, build_precomputed_table
+from repro.models.model import Model
+
+# 1. a small llama-style model (serial blocks, RoPE, GQA, SwiGLU)
+cfg = ModelConfig(name='quickstart', arch_class='dense', num_layers=4,
+                  d_model=256, num_heads=8, num_kv_heads=2, head_dim=32,
+                  d_ff=1024, vocab_size=1024, max_seq_len=256,
+                  dtype='float32')
+model = Model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+print(f'model: {cfg.name}, {model.num_params():,} params, '
+      f'{cfg.num_layers} layers')
+
+# 2. precompute the first layer (offline, once per vocabulary entry)
+table = build_precomputed_table(params, cfg)
+print(f'precomputed table: {table.table.shape[0]} vocab rows x '
+      f'{table.row_width} values  (layout: '
+      f'{" + ".join(f"{n}[{w}]" for n, w in table.layout)})')
+assert table.row_width == 2 * (cfg.d_model + cfg.kv_size)   # paper: 2(d+e)
+
+# 3. equivalence: the precomputed model IS the same model
+tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                            cfg.vocab_size)
+logits_base, _ = model.apply(params, {'tokens': tokens})
+logits_pre, _ = model.apply(params, {'tokens': tokens}, precomputed=table)
+diff = float(jnp.max(jnp.abs(logits_base - logits_pre)))
+print(f'max |logits_base - logits_precomputed| = {diff:.2e}')
+assert diff < 1e-4
+
+# 4. the paper's accounting for this model
+a = analyze(cfg)
+print(f'eliminated first-layer weights : {a.eliminated_weights:,}')
+for B in (1, 16, 256):
+    print(f'  batch {B:4d}: first-layer read reduction '
+          f'{a.reduction_factor(B, cfg.d_model):8.1f}x')
+print(f'total weight-memory delta      : {a.net_memory_delta:+,} values '
+      f'({100 * a.rel_memory_delta:+.1f}%)')
+print('OK')

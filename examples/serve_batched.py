@@ -1,0 +1,62 @@
+"""End-to-end serving demo (the paper's deployment): a small LM served with
+batched requests through the continuous-batching engine, baseline vs
+precomputed-first-layer, with identical greedy outputs and timing comparison.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+sys.path.insert(0, 'src')
+
+import time
+
+import jax
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models.model import Model
+from repro.serving import Request, ServingEngine
+
+cfg = ModelConfig(name='serve-demo', arch_class='dense', num_layers=4,
+                  d_model=256, num_heads=8, num_kv_heads=4, head_dim=32,
+                  d_ff=1024, vocab_size=2048, max_seq_len=512,
+                  dtype='float32')
+model = Model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+table = model.build_table(params)
+print(f'{cfg.name}: {model.num_params():,} params; table '
+      f'{table.table.shape} ({table.row_width} vals/token, paper 2(d+e)='
+      f'{2 * (cfg.d_model + cfg.kv_size)})')
+
+rng = np.random.default_rng(0)
+
+
+def make_requests():
+    return [Request(uid=i, prompt=rng.integers(3, 2000, size=6),
+                    max_new_tokens=24) for i in range(8)]
+
+
+def run(precomputed, label):
+    eng = ServingEngine(model, params, max_slots=4, max_seq=256,
+                        precomputed=precomputed)
+    warm = Request(uid=-1, prompt=np.array([5, 6, 7]), max_new_tokens=2)
+    eng.submit(warm)
+    eng.run()
+    rng_local = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng_local.integers(3, 2000, size=6),
+                    max_new_tokens=24) for i in range(8)]
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.generated) for r in reqs)
+    print(f'{label:12s}: {toks} tokens in {dt:.2f}s '
+          f'({toks / dt:6.1f} tok/s), mean TTFT '
+          f'{eng.stats(reqs)["mean_ttft_s"] * 1e3:.0f} ms')
+    return [r.generated for r in reqs]
+
+
+out_base = run(None, 'baseline')
+out_pre = run(table, 'precompute')
+assert out_base == out_pre, 'precompute changed the generated tokens!'
+print('greedy outputs identical across modes - the paper\'s trick is exact.')

@@ -1,0 +1,43 @@
+"""InternVL-style VLM demo of the HYBRID precompute mode: text tokens gather
+their first-layer rows from the table; continuous image-patch embeddings
+compute layer-0 projections on the fly; outputs are spliced and equivalent
+to the baseline.
+
+Run:  PYTHONPATH=src python examples/vlm_hybrid_precompute.py
+"""
+import sys
+sys.path.insert(0, 'src')
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models.model import Model, VLM_PREFIX
+
+cfg = get_smoke_config('internvl2_1b')
+model = Model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+B, S_text = 2, 40
+tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S_text), 0,
+                            cfg.vocab_size)
+patches = jax.random.normal(jax.random.PRNGKey(2),
+                            (B, cfg.encoder.source_len,
+                             cfg.encoder.frontend_dim))
+batch = {'tokens': tokens, 'patches': patches}
+
+logits_base, _ = model.apply(params, batch)
+table = model.build_table(params)
+logits_pre, _ = model.apply(params, batch, precomputed=table)
+diff = float(jnp.max(jnp.abs(logits_base - logits_pre)))
+
+P = cfg.encoder.source_len
+n_text = S_text
+frac = n_text / (n_text + P)
+print(f'{cfg.name}: seq = {VLM_PREFIX} text + {P} image + '
+      f'{S_text - VLM_PREFIX} text = {n_text + P} positions')
+print(f'hybrid precompute equivalence: max diff {diff:.2e}')
+assert diff < 1e-3
+print(f'table rows used for {100 * frac:.0f}% of positions (text); '
+      f'vision positions computed on the fly -> paper savings scale with '
+      f'the text fraction.')

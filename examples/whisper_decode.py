@@ -1,0 +1,57 @@
+"""Whisper-style encoder-decoder demo: stub audio frames -> encoder ->
+cross-attending decoder, greedy decode loop, and the paper's verdict on it —
+faithful Whisper (learned PE) BLOCKS precompute; the RoPE variant enables it.
+
+Run:  PYTHONPATH=src python examples/whisper_decode.py
+"""
+import sys
+sys.path.insert(0, 'src')
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import analyze
+from repro.models.model import Model
+
+B = 2
+
+for arch in ('whisper_tiny', 'whisper_tiny_rope'):
+    cfg = get_smoke_config(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    frames = jax.random.normal(jax.random.PRNGKey(1),
+                               (B, cfg.encoder.source_len,
+                                cfg.encoder.frontend_dim))
+    # prefill: encoder + cross K/V caches; decode 12 tokens greedily
+    from repro.models.encdec import encoder_apply, prefill_cross_cache
+    enc_out = encoder_apply(params['encoder'], frames, cfg)
+    states = model.make_states(B, 32, jnp.float32)
+    xkv = prefill_cross_cache(params, enc_out, cfg)
+
+    def put_xkv(states, xkv):
+        states['layer0']['xk'], states['layer0']['xv'] = xkv['layer0']
+        if 'body' in xkv:
+            states['body'][0]['xk'], states['body'][0]['xv'] = xkv['body'][0]
+        for i, kv in enumerate(xkv.get('tail', [])):
+            states['tail'][i]['xk'], states['tail'][i]['xv'] = kv
+        return states
+
+    states = put_xkv(states, xkv)
+    tok = jnp.full((B, 1), 1, jnp.int32)        # BOS
+    outs = []
+    for t in range(12):
+        logits, states = model.decode_step(params, tok, states,
+                                           jnp.full((B,), t, jnp.int32))
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        outs.append(int(tok[0, 0]))
+    print(f'{cfg.name}: decoded {outs}')
+    if cfg.precompute_supported:
+        a = analyze(cfg)
+        print(f'  precompute OK: row={a.row_width}, B=1 first-layer read '
+              f'reduction {a.reduction_factor(1, cfg.d_model):.0f}x, '
+              f'whole-model bound {100 / cfg.num_layers:.0f}% '
+              f'(paper abstract: 4-layer Whisper-tiny -> 25%)')
+    else:
+        print('  precompute BLOCKED: learned positional embedding sits '
+              'between the embedding and QKV (paper fig 2a).')

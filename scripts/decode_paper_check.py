@@ -1,0 +1,63 @@
+"""Validate the paper's decode-time claim against the compiled dry-run.
+
+XLA's ``cost_analysis()['bytes accessed']`` counts a gather's WHOLE operand
+(the embedding table / precomputed table), but hardware touches only the B
+gathered rows. This script corrects both paths to *touched* bytes and
+compares the measured per-device first-layer savings against the paper's
+prediction (eliminated weight reads, model-axis-sharded):
+
+    corrected(pre)  = hlo_bytes - table_shard + B_local * row * 2
+    corrected(base) = hlo_bytes - embed_shard + B_local * d * 2
+    measured saving = corrected(base) - corrected(pre)
+    paper predicts  = 2 * eliminated_weights / model_axis   (bytes/device)
+
+Usage: PYTHONPATH=src python scripts/decode_paper_check.py
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, 'src')
+
+from repro.configs import get_config
+from repro.core import analyze
+
+DIR = 'experiments/dryrun'
+MODEL_AXIS = 16
+DATA_AXIS = 16
+BYTES = 2  # bf16
+
+
+def main():
+    print(f'{"arch":22s} {"paper pred KB":>13s} {"measured KB":>12s} '
+          f'{"ratio":>6s}')
+    rows = []
+    for arch in ['gemma3_1b', 'llama3_405b', 'deepseek_v2_lite_16b',
+                 'mixtral_8x7b', 'internvl2_1b', 'gemma3_27b', 'glm4_9b',
+                 'xlstm_125m', 'hymba_1_5b']:
+        pre = json.load(open(f'{DIR}/{arch}_decode_32k_sp_pre.json'))
+        base = json.load(open(f'{DIR}/{arch}_decode_32k_sp_base.json'))
+        if pre['status'] != 'ok' or base['status'] != 'ok':
+            continue
+        cfg = get_config(arch.replace('_', '-')
+                         .replace('1-5b', '1.5b')
+                         .replace('v2-lite-16b', 'v2-lite-16b'))
+        a = analyze(cfg)
+        B_local = 128 // DATA_AXIS
+        vshard = -(-cfg.vocab_size // MODEL_AXIS)
+        table_shard = vshard * a.row_width * BYTES
+        embed_shard = vshard * cfg.d_model * BYTES
+        corr_pre = pre['hlo_bytes'] - table_shard + B_local * a.row_width \
+            * BYTES
+        corr_base = base['hlo_bytes'] - embed_shard + B_local * cfg.d_model \
+            * BYTES
+        measured = (corr_base - corr_pre) / 1024
+        predicted = a.eliminated_weights * BYTES / MODEL_AXIS / 1024
+        ratio = measured / predicted if predicted else float('nan')
+        rows.append((arch, predicted, measured, ratio))
+        print(f'{arch:22s} {predicted:13.1f} {measured:12.1f} {ratio:6.2f}')
+    return rows
+
+
+if __name__ == '__main__':
+    main()

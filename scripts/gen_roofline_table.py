@@ -1,0 +1,58 @@
+"""Regenerate the §Roofline markdown table from experiments/dryrun/*.json.
+
+Usage: PYTHONPATH=src python scripts/gen_roofline_table.py [--dir DIR]
+Prints the table; paste/refresh into EXPERIMENTS.md §Roofline.
+"""
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, 'src')
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--dir', default='experiments/dryrun')
+    ap.add_argument('--mesh', default='all',
+                    choices=['all', 'single', 'multi'])
+    args = ap.parse_args()
+    recs = []
+    for p in sorted(glob.glob(os.path.join(args.dir, '*.json'))):
+        with open(p) as f:
+            recs.append((os.path.basename(p), json.load(f)))
+
+    shape_order = {'train_4k': 0, 'prefill_32k': 1, 'decode_32k': 2,
+                   'long_500k': 3}
+    recs.sort(key=lambda kr: (kr[1]['arch'], shape_order.get(
+        kr[1]['shape'], 9), kr[1]['mesh'], not kr[1].get('precompute', True)))
+
+    print('| arch | shape | mesh | pre | compute_s | memory_s | '
+          'collective_s | bottleneck | GiB/dev | useful |')
+    print('|---|---|---|---|---|---|---|---|---|---|')
+    for name, r in recs:
+        if args.mesh == 'single' and 'multi' in r['mesh']:
+            continue
+        if args.mesh == 'multi' and 'single' in r['mesh']:
+            continue
+        mesh = '2x16x16' if 'multi' in r['mesh'] else '16x16'
+        pre = 'Y' if r.get('precompute', True) else 'base'
+        if r['status'] == 'skipped':
+            print(f"| {r['arch']} | {r['shape']} | {mesh} | {pre} | — | — | "
+                  f"— | skip: {r['skip_reason'][:42]} | — | — |")
+            continue
+        if r['status'] == 'error':
+            print(f"| {r['arch']} | {r['shape']} | {mesh} | {pre} | — | — | "
+                  f"— | **ERROR** | — | — |")
+            continue
+        rf = r['roofline']
+        print(f"| {r['arch']} | {r['shape']} | {mesh} | {pre} "
+              f"| {rf['compute_s']:.2e} | {rf['memory_s']:.2e} "
+              f"| {rf['collective_s']:.2e} | **{rf['bottleneck']}** "
+              f"| {r['bytes_per_device'] / 2**30:.2f} "
+              f"| {min(r.get('useful_flops_ratio', 0), 99):.2f} |")
+
+
+if __name__ == '__main__':
+    main()

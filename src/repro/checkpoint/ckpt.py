@@ -1,0 +1,107 @@
+"""Checkpointing: pytree <-> npz with a JSON manifest (no orbax dependency).
+
+Leaves are addressed by '/'-joined tree paths; the manifest records shapes,
+dtypes and the step, so restore can validate against a schema and re-apply
+shardings (restore accepts optional per-leaf NamedShardings for device_put).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix='') -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f'{prefix}{k}/'))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f'{prefix}{i}/'))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]):
+    root: Dict[str, Any] = {}
+    for path, v in flat.items():
+        parts = path.split('/')
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+
+    def listify(node):
+        if not isinstance(node, dict):
+            return node
+        keys = list(node.keys())
+        if keys and all(re.fullmatch(r'\d+', k) for k in keys):
+            return [listify(node[str(i)]) for i in range(len(keys))]
+        return {k: listify(v) for k, v in node.items()}
+    return listify(root)
+
+
+def save_checkpoint(directory: str, params, step: int,
+                    extra: Optional[Dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(params)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    path = os.path.join(directory, f'ckpt_{step:08d}')
+    # npz can't serialise ml_dtypes (bfloat16 etc.) — store raw uint views
+    # and record the true dtype in the manifest
+    storable = {}
+    for k, v in arrays.items():
+        if v.dtype.name not in np.sctypeDict:
+            v = v.view(np.dtype(f'u{v.dtype.itemsize}'))
+        storable[k.replace('/', '__')] = v
+    np.savez(path + '.npz', **storable)
+    manifest = {
+        'step': step,
+        'leaves': {k: {'shape': list(v.shape), 'dtype': str(v.dtype)}
+                   for k, v in arrays.items()},
+        'extra': extra or {},
+    }
+    with open(path + '.json', 'w') as f:
+        json.dump(manifest, f, indent=1)
+    return path + '.npz'
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    cands = sorted(p for p in os.listdir(directory)
+                   if p.startswith('ckpt_') and p.endswith('.npz'))
+    return os.path.join(directory, cands[-1]) if cands else None
+
+
+def restore_checkpoint(path: str, shardings=None):
+    """-> (params, step). ``shardings``: optional pytree of NamedShardings."""
+    raw = np.load(path)
+    with open(path[:-4] + '.json') as f:
+        manifest = json.load(f)
+    import ml_dtypes
+    flat = {}
+    for k in raw.files:
+        key = k.replace('__', '/')
+        v = raw[k]
+        want = manifest['leaves'][key]['dtype']
+        if str(v.dtype) != want:            # restore ml_dtypes views
+            v = v.view(np.dtype(getattr(ml_dtypes, want, want)))
+        flat[key] = v
+    tree = _unflatten(flat)
+    if shardings is not None:
+        flat_sh = _flatten(shardings)
+        tree = _unflatten({
+            k: jax.device_put(v, flat_sh.get(k)) if flat_sh.get(k) is not None
+            else jnp.asarray(v)
+            for k, v in _flatten(tree).items()})
+    else:
+        tree = jax.tree_util.tree_map(jnp.asarray, tree)
+    return tree, manifest['step']

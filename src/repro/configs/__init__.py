@@ -1,0 +1,44 @@
+"""Architecture registry: ``get_config(name)`` / ``get_smoke_config(name)``.
+
+The ten assigned architectures (+ the paper's own examples and variants).
+Every module defines ``config()`` (exact assigned dims) and ``smoke_config()``
+(reduced: ≤2-ish layers, d_model ≤ 512, ≤4 experts) for CPU tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+from repro.config import ModelConfig
+
+# the 10 assigned architectures
+ARCH_IDS: List[str] = [
+    'whisper_tiny', 'gemma3_1b', 'llama3_405b', 'deepseek_v2_lite_16b',
+    'mixtral_8x7b', 'internvl2_1b', 'gemma3_27b', 'glm4_9b', 'xlstm_125m',
+    'hymba_1_5b',
+]
+
+# the paper's own §3 example models + variants used by benchmarks
+EXTRA_IDS: List[str] = [
+    'pythia_6_9b', 'mistral_7b', 'mixtral_8x7b_parallel', 'whisper_tiny_rope',
+]
+
+ALL_IDS = ARCH_IDS + EXTRA_IDS
+
+
+def _norm(name: str) -> str:
+    return name.replace('-', '_').replace('.', '_')
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f'repro.configs.{_norm(name)}')
+    cfg = mod.config()
+    cfg.validate()
+    return cfg
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f'repro.configs.{_norm(name)}')
+    cfg = mod.smoke_config()
+    cfg.validate()
+    return cfg

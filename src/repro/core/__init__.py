@@ -1,0 +1,12 @@
+"""The paper's contribution: first-layer precompute (Graef 2024)."""
+from repro.core.precompute import (PrecomputedTable, build_precomputed_table,
+                                   hybrid_vlm_pre0, table_abstract)
+from repro.core.analysis import (PrecomputeAnalysis, WeightCounts, analyze,
+                                 eliminated_weights, max_relative_savings,
+                                 weight_counts)
+
+__all__ = [
+    'PrecomputedTable', 'build_precomputed_table', 'table_abstract',
+    'hybrid_vlm_pre0', 'PrecomputeAnalysis', 'WeightCounts', 'analyze',
+    'eliminated_weights', 'max_relative_savings', 'weight_counts',
+]

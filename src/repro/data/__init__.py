@@ -1,0 +1,5 @@
+from repro.data.pipeline import (ByteTokenizer, synthetic_batches,
+                                 text_batches, shard_batch)
+
+__all__ = ['ByteTokenizer', 'synthetic_batches', 'text_batches',
+           'shard_batch']

@@ -1,0 +1,83 @@
+"""Data pipeline: byte-level tokenizer, synthetic learnable streams, sharded
+batching. No external deps — everything the training examples need lives here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ByteTokenizer:
+    """Byte-level tokenizer with BOS/EOS/PAD specials."""
+    PAD, BOS, EOS = 0, 1, 2
+    OFFSET = 3
+
+    @property
+    def vocab_size(self) -> int:
+        return 256 + self.OFFSET
+
+    def encode(self, text: str, *, bos: bool = True, eos: bool = False):
+        ids = [b + self.OFFSET for b in text.encode('utf-8')]
+        if bos:
+            ids = [self.BOS] + ids
+        if eos:
+            ids = ids + [self.EOS]
+        return np.asarray(ids, np.int32)
+
+    def decode(self, ids) -> str:
+        bs = bytes(int(i) - self.OFFSET for i in np.asarray(ids).ravel()
+                   if int(i) >= self.OFFSET)
+        return bs.decode('utf-8', errors='replace')
+
+
+def synthetic_batches(vocab_size: int, batch: int, seq_len: int, *,
+                      seed: int = 0, order: int = 2
+                      ) -> Iterator[Dict[str, np.ndarray]]:
+    """Infinite stream of *learnable* synthetic LM batches.
+
+    Sequences follow a random order-``order`` automaton over a 64-symbol
+    alphabet embedded into the vocab, with 10% uniform noise — enough
+    structure that cross-entropy visibly drops within a few hundred steps,
+    which is what the training examples assert.
+    """
+    rng = np.random.default_rng(seed)
+    K = min(64, vocab_size)
+    trans = rng.integers(0, K, size=(K,) * order)   # deterministic next-symbol
+    while True:
+        toks = np.empty((batch, seq_len + 1), np.int32)
+        state = rng.integers(0, K, size=(batch, order))
+        for t in range(seq_len + 1):
+            nxt = trans[tuple(state[:, i] for i in range(order))]
+            noise = rng.random(batch) < 0.1
+            nxt = np.where(noise, rng.integers(0, K, batch), nxt)
+            toks[:, t] = nxt
+            state = np.concatenate([state[:, 1:], nxt[:, None]], axis=1)
+        yield {'tokens': toks[:, :-1], 'targets': toks[:, 1:]}
+
+
+def text_batches(path: str, batch: int, seq_len: int, *, seed: int = 0
+                 ) -> Iterator[Dict[str, np.ndarray]]:
+    """Byte-level batches from a text file (wraps around forever)."""
+    tok = ByteTokenizer()
+    data = tok.encode(open(path, 'r', encoding='utf-8').read(), bos=False)
+    n = len(data) - seq_len - 1
+    rng = np.random.default_rng(seed)
+    while True:
+        starts = rng.integers(0, n, size=batch)
+        window = np.stack([data[s:s + seq_len + 1] for s in starts])
+        yield {'tokens': window[:, :-1], 'targets': window[:, 1:]}
+
+
+def shard_batch(batch: Dict[str, np.ndarray], rules=None) -> Dict:
+    """device_put with the batch sharding implied by the rules (if any)."""
+    if rules is None or rules.mesh is None:
+        return {k: jnp.asarray(v) for k, v in batch.items()}
+    out = {}
+    for k, v in batch.items():
+        axes = ('batch',) + (None,) * (v.ndim - 1)
+        out[k] = jax.device_put(v, rules.sharding(axes))
+    return out

@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: fused gather of precomputed first-layer rows.
+
+THE paper's runtime hot path: one (padded) row read per token from the
+expanded embedding table. Token ids arrive via *scalar prefetch*
+(``PrefetchScalarGridSpec``) so the row's HBM->VMEM DMA can be issued before
+the grid step runs — the TPU-idiomatic version of "the token-ID provides the
+read address" (paper §1).
+
+Grid: one step per block of ``rows_per_block`` tokens; the table BlockSpec's
+index_map reads the prefetched ids, so each step DMAs exactly the rows it
+needs. Row width is padded to a 128-lane multiple by the ops.py wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(ids_ref, table_ref, out_ref):
+    # the BlockSpec index_map already selected the right table row for this
+    # grid step; the body is a pure VMEM copy
+    out_ref[...] = table_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=('interpret',))
+def embed_gather(table: jax.Array, ids: jax.Array, *,
+                 interpret: bool = True) -> jax.Array:
+    """table (V, W), ids (N,) int32 -> rows (N, W). W must be 128-aligned
+    (use ops.embed_gather_rows for the padding wrapper)."""
+    V, W = table.shape
+    N = ids.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((1, W), lambda i, ids_ref: (ids_ref[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, W), lambda i, ids_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, W), table.dtype),
+        interpret=interpret,
+    )(ids, table)

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: blocked causal flash attention with sliding window.
+
+Grid (batch, q_heads, q_blocks, kv_blocks) — the kv_blocks axis iterates
+fastest, so the fp32 running-softmax state (m, l, acc) lives in VMEM scratch
+that persists across kv steps of one (b, h, qi) cell. GQA is folded into the
+k/v BlockSpec index maps (q head h reads kv head h // group).
+
+Sliding-window layers skip out-of-range kv blocks via ``pl.when`` (the DMA
+for a skipped block is still scheduled by the grid, but no MXU work runs —
+the Pallas analogue of the pure-JAX span slicing in models/attention.py).
+
+Block sizes default to 128x128: MXU-aligned (128 lanes) and small enough
+that q/k/v blocks + fp32 scratch fit VMEM at head_dim <= 256.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  bq, bk, n_kv, causal, window, scale):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = kj * bk
+    # block-level reachability (static per grid cell at trace time would be
+    # ideal; on TPU this is a cheap scalar predicate)
+    needed = jnp.bool_(True)
+    if causal:
+        needed &= k_start <= q_start + bq - 1
+    if window:
+        needed &= k_start + bk - 1 >= q_start - window + 1
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                 # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        iq = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        jk = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= jk <= iq
+        if window:
+            mask &= (iq - jk) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(kj == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=('causal', 'window', 'block_q',
+                                             'block_k', 'interpret'))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q (B,S,H,d); k,v (B,S,KH,d) -> (B,S,H,d). S % block == 0 (ops pads)."""
+    B, S, H, d = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    bq, bk = min(block_q, S), min(block_k, S)
+    n_q, n_kv = S // bq, S // bk
+    scale = d ** -0.5
+
+    # layouts: (B, H, S, d) blocks of (1, 1, b, d)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, n_kv=n_kv,
+                          causal=causal, window=window, scale=scale),
+        grid=(B, H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

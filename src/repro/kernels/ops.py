@@ -1,0 +1,86 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handle the alignment contracts (128-lane row widths, block-multiple sequence
+lengths) by padding/unpadding, pick interpret mode automatically (interpret on
+CPU — the kernel body runs in Python for validation; compiled on TPU), and
+expose drop-in signatures matching the pure-jnp refs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embed_gather import embed_gather
+from repro.kernels.rmsnorm_qkv import rmsnorm_matmul
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.decode_attention import decode_attention
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != 'tpu'
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int, value=0) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def embed_gather_rows(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """Precomputed-row gather; any (V, W) table, any ids shape -> (*ids, W)."""
+    W = table.shape[1]
+    tp = _pad_to(table, 128, axis=1)
+    flat = ids.reshape(-1).astype(jnp.int32)
+    rows = embed_gather(tp, flat, interpret=_interpret())
+    return rows[:, :W].reshape(*ids.shape, W)
+
+
+def rmsnorm_qkv(x: jax.Array, scale: jax.Array, wq: jax.Array, wk: jax.Array,
+                wv: jax.Array, *, eps: float = 1e-6
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused RMSNorm + QKV: x (..., d) -> q (..., Q), k (..., E), v (..., E)."""
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    xf = _pad_to(x.reshape(-1, d), 128, axis=0)
+    w = jnp.concatenate([wq, wk, wv], axis=1)
+    wp = _pad_to(w, 128, axis=1)
+    out = rmsnorm_matmul(xf, scale, wp, eps=eps, interpret=_interpret())
+    n = int(jnp.prod(jnp.asarray(lead))) if lead else 1
+    out = out[: (x.reshape(-1, d)).shape[0], : w.shape[1]]
+    Q, E = wq.shape[1], wk.shape[1]
+    out = out.reshape(*lead, w.shape[1])
+    return out[..., :Q], out[..., Q:Q + E], out[..., Q + E:]
+
+
+def flash_attention_bshd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = True, window: int = 0,
+                         block: int = 128) -> jax.Array:
+    """(B,S,H,d) x (B,S,KH,d)^2 -> (B,S,H,d); pads S to a block multiple."""
+    S = q.shape[1]
+    qp = _pad_to(q, block, axis=1)
+    kp = _pad_to(k, block, axis=1)
+    vp = _pad_to(v, block, axis=1)
+    out = flash_attention(qp, kp, vp, causal=causal, window=window,
+                          block_q=block, block_k=block,
+                          interpret=_interpret())
+    return out[:, :S]
+
+
+def decode_attention_cache(q: jax.Array, k_cache: jax.Array,
+                           v_cache: jax.Array, cache_pos: jax.Array,
+                           pos: jax.Array, *, window: int = 0,
+                           block: int = 128) -> jax.Array:
+    """(B,H,d) against (B,Sc,KH,d) caches; pads Sc with empty (-1) slots."""
+    kp = _pad_to(k_cache, block, axis=1)
+    vp = _pad_to(v_cache, block, axis=1)
+    cp = _pad_to(cache_pos, block, axis=1, value=-1)
+    return decode_attention(q, kp, vp, cp, pos.astype(jnp.int32),
+                            window=window, block_s=block,
+                            interpret=_interpret())

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests).
+
+Each function mirrors one kernel's contract exactly (shapes, dtypes,
+accumulation precision) with straightforward jnp code.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def embed_gather_ref(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """Row gather from the precomputed table: (V, W), (N,) -> (N, W)."""
+    return jnp.take(table, ids, axis=0)
+
+
+def rmsnorm_qkv_ref(x: jax.Array, scale: jax.Array, wq: jax.Array,
+                    wk: jax.Array, wv: jax.Array, *, eps: float = 1e-6
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused RMSNorm + Q/K/V projection: x (N, d) -> (N,q),(N,e),(N,e).
+
+    Norm in fp32, matmul accumulates fp32, outputs cast to x.dtype — the
+    computation first-layer precompute eliminates.
+    """
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xn = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    q = (xn @ wq.astype(jnp.float32)).astype(x.dtype)
+    k = (xn @ wk.astype(jnp.float32)).astype(x.dtype)
+    v = (xn @ wv.astype(jnp.float32)).astype(x.dtype)
+    return q, k, v
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        scale: Optional[float] = None) -> jax.Array:
+    """(B, S, H, d), (B, S, KH, d) x2 -> (B, S, H, d); GQA via H % KH == 0."""
+    B, S, H, d = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    sc = d ** -0.5 if scale is None else scale
+    qg = q.reshape(B, S, KH, G, d).astype(jnp.float32)
+    s = jnp.einsum('bqkgd,bskd->bkgqs', qg, k.astype(jnp.float32)) * sc
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= j <= i
+    if window:
+        mask &= (i - j) < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum('bkgqs,bskd->bqkgd', p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, d).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         cache_pos: jax.Array, pos: jax.Array, *,
+                         window: int = 0) -> jax.Array:
+    """Single-token attention against a (possibly ring) cache.
+
+    q: (B, H, d); k/v_cache: (B, Sc, KH, d); cache_pos: (B, Sc) int32
+    (-1 = empty slot); pos: (B,) current positions. -> (B, H, d).
+    """
+    B, H, d = q.shape
+    KH = k_cache.shape[2]
+    G = H // KH
+    qg = q.reshape(B, KH, G, d).astype(jnp.float32)
+    s = jnp.einsum('bkgd,bskd->bkgs', qg,
+                   k_cache.astype(jnp.float32)) * d ** -0.5
+    cp = cache_pos[:, None, None, :]
+    valid = (cp >= 0) & (cp <= pos[:, None, None, None])
+    if window:
+        valid &= (pos[:, None, None, None] - cp) < window
+    s = jnp.where(valid, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum('bkgs,bskd->bkgd', p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, d).astype(q.dtype)

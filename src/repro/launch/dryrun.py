@@ -1,0 +1,264 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture x input shape x mesh) lowers,
+compiles, fits, and report its roofline terms — without TPU hardware.
+
+The two lines above MUST precede any other import (jax locks the device count
+on first init). 512 host devices cover both the single-pod (16,16) and the
+two-pod (2,16,16) production meshes.
+
+For each combination this driver:
+  1. builds abstract parameters / optimizer state / inputs
+     (ShapeDtypeStruct + NamedSharding — zero allocation),
+  2. ``jax.jit(step).lower(...).compile()`` under the production mesh,
+  3. records memory_analysis() (fits?), cost_analysis() (FLOPs/bytes),
+     and collective traffic parsed from the optimized HLO,
+  4. writes one JSON per combo to --out (consumed by benchmarks/roofline.py
+     and EXPERIMENTS.md).
+
+Decode shapes lower ``serve_step`` (one token against a seq_len-deep cache),
+with the paper's precomputed-table path by default (--no-precompute for the
+baseline); train/prefill lower ``train_step`` / ``prefill``.
+"""
+import argparse
+import json
+import math
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import INPUT_SHAPES, InputShape, ModelConfig
+from repro.configs import ARCH_IDS, get_config
+from repro.core.precompute import PrecomputedTable
+from repro.launch.hlo_analysis import collective_bytes, roofline_terms
+from repro.launch.mesh import make_production_mesh, rules_for, skip_reason
+from repro.models.layers import abstract_params, param_specs_flat
+from repro.models.model import Model
+from repro.optim import adamw, warmup_cosine_schedule
+from repro.sharding import logical_sds
+from repro.training import TrainConfig, make_train_step
+
+
+# ---------------------------------------------------------- model FLOPs
+def active_params(cfg: ModelConfig) -> Dict[str, float]:
+    """(active_params excl. vocab-dim matrices, vocab matmul width)."""
+    flat = param_specs_flat(Model(cfg).schema())
+    n_active, n_vocab = 0.0, 0.0
+    for path, spec in flat.items():
+        n = float(np.prod(spec.shape))
+        if 'vocab' in spec.logical_axes:
+            n_vocab += n
+            continue
+        if 'experts' in spec.logical_axes and cfg.moe:
+            n *= cfg.moe.top_k / cfg.moe.num_experts
+        n_active += n
+    return {'active': n_active, 'vocab': n_vocab}
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """MODEL_FLOPS: 6·N·D (train) / 2·N·D (inference) + attention terms."""
+    ap = active_params(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    mult = 6.0 if shape.mode == 'train' else 2.0
+    tokens = B * S if shape.mode in ('train', 'prefill') else B
+    flops = mult * ap['active'] * tokens + mult / 2 * ap['vocab'] * tokens
+    # attention score/value flops per layer kind
+    attn_mult = 2.0 if shape.mode == 'train' else 1.0  # bwd ~2x attn fwd...
+    for kind in cfg.layer_kinds:
+        if kind in ('mlstm', 'slstm'):
+            continue
+        w = cfg.layer_window(kind)
+        if shape.mode in ('train', 'prefill'):
+            ctx = min(S, w) if w else S
+            f = 2.0 * B * S * ctx * cfg.num_heads * cfg.head_dim * 2
+        else:
+            ctx = min(S, w) if w else S
+            f = 2.0 * B * ctx * cfg.num_heads * cfg.head_dim * 2
+        flops += attn_mult * f
+    return flops
+
+
+# ------------------------------------------------------------- step builders
+def build_lowerable(cfg: ModelConfig, shape: InputShape, mesh, *,
+                    precompute: bool = True, kv_quant: bool = False):
+    """-> (fn, abstract_args tuple) ready for jax.jit(fn).lower(*args)."""
+    rules = rules_for(cfg, shape, mesh)
+    model = Model(cfg, kv_quant=kv_quant)
+    params_abs = abstract_params(model.schema(), rules, cfg.dtype)
+
+    if shape.mode == 'train':
+        opt = adamw(warmup_cosine_schedule(3e-4, 100, 10_000),
+                    moment_dtype='bfloat16')
+        tcfg = TrainConfig(remat=True)
+        step = make_train_step(model, opt, tcfg, rules)
+        opt_abs = opt.init(params_abs)
+        specs = model.input_specs(shape, rules)
+        return step, (params_abs, opt_abs, specs)
+
+    if shape.mode == 'prefill':
+        def prefill(params, batch):
+            logits, _ = model.apply(params, batch, rules=rules)
+            return logits[:, -1, :]
+        return prefill, (params_abs, model.input_specs(shape, rules))
+
+    # decode
+    specs = model.input_specs(shape, rules)
+    use_pre = precompute and cfg.precompute_supported
+    if use_pre:
+        table_abs = model.table_abstract(rules)
+        layout = table_abs.layout
+
+        def serve_step(params, table_arr, tokens, states, pos):
+            table = PrecomputedTable(table_arr, layout)
+            return model.decode_step(params, tokens, states, pos,
+                                     precomputed=table, rules=rules)
+        return serve_step, (params_abs, table_abs.table, specs['tokens'],
+                            specs['states'], specs['pos'])
+
+    def serve_step(params, tokens, states, pos):
+        return model.decode_step(params, tokens, states, pos, rules=rules)
+    return serve_step, (params_abs, specs['tokens'], specs['states'],
+                        specs['pos'])
+
+
+# ------------------------------------------------------------------- runner
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               precompute: bool = True, mesh=None,
+               hlo_collectives: bool = True,
+               kv_quant: bool = False) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    rec: Dict[str, Any] = {
+        'arch': arch, 'shape': shape_name,
+        'mesh': 'multi_pod_2x16x16' if multi_pod else 'single_pod_16x16',
+        'mode': shape.mode, 'precompute': precompute,
+        'kv_quant': kv_quant,
+    }
+    reason = skip_reason(cfg, shape)
+    if reason:
+        rec['status'] = 'skipped'
+        rec['skip_reason'] = reason
+        return rec
+    t0 = time.time()
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(mesh.devices.shape))
+    try:
+        fn, args = build_lowerable(cfg, shape, mesh, precompute=precompute,
+                                   kv_quant=kv_quant)
+        with mesh:
+            lowered = jax.jit(fn).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        rec['status'] = 'ok'
+        rec['lower_s'] = round(t_lower, 2)
+        rec['compile_s'] = round(t_compile, 2)
+        rec['memory'] = {
+            k: int(getattr(mem, k, 0) or 0) for k in
+            ('argument_size_in_bytes', 'output_size_in_bytes',
+             'temp_size_in_bytes', 'generated_code_size_in_bytes',
+             'alias_size_in_bytes')}
+        per_dev = (rec['memory']['argument_size_in_bytes']
+                   + rec['memory']['temp_size_in_bytes'])
+        rec['bytes_per_device'] = per_dev
+        rec['fits_16g'] = bool(per_dev < 16 * 2 ** 30)
+        flops = float(cost.get('flops', 0.0))
+        bytes_acc = float(cost.get('bytes accessed', 0.0))
+        rec['hlo_flops'] = flops
+        rec['hlo_bytes'] = bytes_acc
+        if hlo_collectives:
+            coll = collective_bytes(compiled.as_text())
+            rec['collectives'] = {k: int(v) for k, v in coll.items()}
+        else:
+            rec['collectives'] = {'total': 0}
+        # cost_analysis + partitioned HLO are PER-DEVICE quantities
+        mf = model_flops(cfg, shape) / n_chips
+        rec['model_flops_per_device'] = mf
+        rec['useful_flops_ratio'] = (mf / flops) if flops else 0.0
+        rec['roofline'] = roofline_terms(flops, bytes_acc,
+                                         rec['collectives']['total'])
+    except Exception as e:  # a failure here is a bug in our sharding config
+        rec['status'] = 'error'
+        rec['error'] = f'{e.__class__.__name__}: {e}'
+        rec['traceback'] = traceback.format_exc()[-4000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument('--arch', default='all',
+                    help='architecture id or "all"')
+    ap.add_argument('--shape', default='all',
+                    help=f'one of {list(INPUT_SHAPES)} or "all"')
+    ap.add_argument('--multi-pod', action='store_true',
+                    help='use the 2-pod (2,16,16)=512-chip mesh')
+    ap.add_argument('--both-meshes', action='store_true')
+    ap.add_argument('--no-precompute', action='store_true',
+                    help='lower the baseline decode path (no table)')
+    ap.add_argument('--out', default='experiments/dryrun')
+    ap.add_argument('--no-collectives', action='store_true',
+                    help='skip HLO text parse (faster)')
+    ap.add_argument('--kv-int8', action='store_true',
+                    help='decode with int8-quantised KV cache (§Perf)')
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == 'all' else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == 'all' else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    os.makedirs(args.out, exist_ok=True)
+
+    results = []
+    for mp in meshes:
+        mesh = make_production_mesh(multi_pod=mp)
+        for arch in archs:
+            for shape in shapes:
+                rec = dryrun_one(arch, shape, multi_pod=mp,
+                                 precompute=not args.no_precompute,
+                                 mesh=mesh,
+                                 hlo_collectives=not args.no_collectives,
+                                 kv_quant=args.kv_int8)
+                results.append(rec)
+                tag = 'mp' if mp else 'sp'
+                pc = 'pre' if not args.no_precompute else 'base'
+                if args.kv_int8:
+                    pc += '_int8'
+                stem = f'{arch}_{shape}_{tag}_{pc}' \
+                    .replace('-', '_').replace('.', '_')
+                fname = stem + '.json'
+                with open(os.path.join(args.out, fname), 'w') as f:
+                    json.dump(rec, f, indent=1)
+                status = rec['status']
+                extra = ''
+                if status == 'ok':
+                    r = rec['roofline']
+                    extra = (f"comp={r['compute_s']:.2e}s "
+                             f"mem={r['memory_s']:.2e}s "
+                             f"coll={r['collective_s']:.2e}s "
+                             f"-> {r['bottleneck']}; "
+                             f"{rec['bytes_per_device']/2**30:.2f} GiB/dev "
+                             f"compile {rec['compile_s']}s")
+                elif status == 'skipped':
+                    extra = rec['skip_reason']
+                else:
+                    extra = rec['error'][:200]
+                print(f'[{status:7s}] {arch:22s} {shape:12s} '
+                      f'{"2x16x16" if mp else "16x16":8s} {extra}',
+                      flush=True)
+    n_ok = sum(r['status'] == 'ok' for r in results)
+    n_skip = sum(r['status'] == 'skipped' for r in results)
+    n_err = sum(r['status'] == 'error' for r in results)
+    print(f'\n{n_ok} ok / {n_skip} skipped / {n_err} errors')
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

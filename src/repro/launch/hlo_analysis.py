@@ -1,0 +1,131 @@
+"""Roofline-term extraction from compiled HLO.
+
+``cost_analysis`` gives FLOPs and bytes, but NOT collective traffic — we parse
+the optimized HLO text: sum the output-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, and multiply
+ops that live inside a ``while`` body (a scanned layer stack) by the loop
+trip count (recovered from the loop condition's comparison constant).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+COLLECTIVES = ('all-gather', 'all-reduce', 'reduce-scatter', 'all-to-all',
+               'collective-permute')
+
+_DTYPE_BYTES = {
+    'f64': 8, 'f32': 4, 'f16': 2, 'bf16': 2, 'f8e4m3fn': 1, 'f8e5m2': 1,
+    's64': 8, 's32': 4, 's16': 2, 's8': 1, 'u64': 8, 'u32': 4, 'u16': 2,
+    'u8': 1, 'pred': 1, 'c64': 8, 'c128': 16,
+}
+
+_SHAPE_RE = re.compile(r'(\w+)\[([\d,]*)\]')
+
+
+def shape_bytes(shape_str: str) -> int:
+    """'bf16[128,4096]{1,0}' -> bytes. Tuples: sum over components."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(','):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> its instruction lines."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = re.match(r'\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*{',
+                     line)
+        if m and ('{' in line):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if line.strip().startswith('}'):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Recover a while-loop trip count from its condition computation:
+    looks for `constant(N)` feeding a compare(LT). Falls back to 1."""
+    consts = []
+    for line in cond_lines:
+        for m in re.finditer(r's32\[\]\s+constant\((\d+)\)', line):
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def collective_bytes(hlo: str) -> Dict[str, float]:
+    """-> {op_kind: total_bytes, ..., 'total': ...}, scan-aware."""
+    comps = _split_computations(hlo)
+
+    # map body-computation -> trip count, from while instructions
+    trip: Dict[str, int] = {}
+    for name, lines in comps.items():
+        for line in lines:
+            m = re.search(r'while\(.*\).*condition=%?([\w\.\-]+).*'
+                          r'body=%?([\w\.\-]+)', line)
+            if not m:
+                m2 = re.search(r'while\(.*\).*body=%?([\w\.\-]+).*'
+                               r'condition=%?([\w\.\-]+)', line)
+                if not m2:
+                    continue
+                body, cond = m2.group(1), m2.group(2)
+            else:
+                cond, body = m.group(1), m.group(2)
+            trip[body] = _trip_count(comps.get(cond, []))
+
+    out: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    for name, lines in comps.items():
+        mult = trip.get(name, 1)
+        for line in lines:
+            s = line.strip()
+            m = re.match(r'%?[\w\.\-]+\s*=\s*(\([^=]*\)|\S+)\s+([\w\-]+)', s)
+            if not m:
+                continue
+            op = m.group(2)
+            kind = next((k for k in COLLECTIVES
+                         if op == k or op.startswith(k + '-')), None)
+            if kind is None:
+                continue
+            out[kind] += shape_bytes(m.group(1)) * mult
+    out['total'] = sum(out[k] for k in COLLECTIVES)
+    return out
+
+
+# ------------------------------------------------------------ roofline terms
+V5E = {
+    'peak_flops': 197e12,        # bf16 FLOP/s per chip
+    'hbm_bw': 819e9,             # bytes/s per chip
+    'ici_bw': 50e9,              # bytes/s per link (~per chip usable)
+}
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll_bytes: float, n_chips: int = 1,
+                   hw: Dict[str, float] = V5E) -> Dict[str, float]:
+    """The three §Roofline terms, in seconds.
+
+    IMPORTANT: XLA's ``cost_analysis`` and the partitioned HLO text are
+    PER-DEVICE under SPMD (each device runs one shard of the module), so the
+    inputs here are per-chip quantities and ``n_chips`` defaults to 1.
+    """
+    compute = flops / (n_chips * hw['peak_flops'])
+    memory = bytes_accessed / (n_chips * hw['hbm_bw'])
+    collective = coll_bytes / (n_chips * hw['ici_bw'])
+    dom = max(('compute', compute), ('memory', memory),
+              ('collective', collective), key=lambda t: t[1])
+    return {'compute_s': compute, 'memory_s': memory,
+            'collective_s': collective, 'bottleneck': dom[0]}

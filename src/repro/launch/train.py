@@ -1,0 +1,54 @@
+"""End-to-end training driver.
+
+CPU-friendly by default (smoke-sized variant of the chosen arch on synthetic
+data); ``--full`` selects the exact assigned config (for real accelerators).
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --steps 200
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ALL_IDS, get_config, get_smoke_config
+from repro.data import synthetic_batches
+from repro.models.model import Model
+from repro.optim import adamw, warmup_cosine_schedule
+from repro.training import TrainConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument('--arch', default='gemma3-1b', choices=[
+        a.replace('_', '-') for a in ALL_IDS] + ALL_IDS)
+    ap.add_argument('--steps', type=int, default=200)
+    ap.add_argument('--batch', type=int, default=8)
+    ap.add_argument('--seq', type=int, default=64)
+    ap.add_argument('--lr', type=float, default=3e-3)
+    ap.add_argument('--full', action='store_true',
+                    help='use the full assigned config (needs accelerators)')
+    ap.add_argument('--ckpt-dir', default='')
+    ap.add_argument('--seed', type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = (get_config if args.full else get_smoke_config)(args.arch)
+    if cfg.arch_class in ('audio', 'vlm'):
+        raise SystemExit('use examples/ for multimodal training demos')
+    model = Model(cfg)
+    print(f'arch={cfg.name} params={model.num_params():,} '
+          f'devices={jax.device_count()}')
+    params = model.init(jax.random.PRNGKey(args.seed))
+    opt = adamw(warmup_cosine_schedule(args.lr, args.steps // 10, args.steps))
+    data = synthetic_batches(cfg.vocab_size, args.batch, args.seq,
+                             seed=args.seed)
+    tcfg = TrainConfig(steps=args.steps, log_every=max(args.steps // 20, 1),
+                       ckpt_dir=args.ckpt_dir or None,
+                       ckpt_every=args.steps // 4 if args.ckpt_dir else 0)
+    _, _, hist = train(model, params, opt, data, tcfg)
+    print(f'final loss {hist[-1]["loss"]:.4f} '
+          f'(from {hist[0]["loss"]:.4f})')
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,394 @@
+"""Multi-head / grouped-query / multi-query attention with RoPE.
+
+Three entry points matter for the paper:
+
+- :func:`compute_qkv` — the projections that first-layer precompute *eliminates*.
+- :func:`attention_core` / :func:`decode_attend` — everything that stays at
+  runtime (RoPE rotation, scores, softmax, value mix).
+- :func:`make_cache` — KV cache; ``local`` (sliding-window) layers get a
+  ring-buffer cache of length ``min(window, seq)`` so long_500k decode fits.
+
+Layer-0-with-precompute calls ``attention_core`` directly on gathered q/k/v.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import ParamSpec
+
+NEG_INF = -2.0 ** 30   # large-negative that survives bf16
+
+
+# ==================================================================== schema
+def attention_schema(cfg: ModelConfig) -> Dict:
+    d, q, e = cfg.d_model, cfg.q_size, cfg.kv_size
+    sch = {
+        'wq': L.dense_schema(d, q, ('embed', 'qkv_out')),
+        'wk': L.dense_schema(d, e, ('embed', 'qkv_out')),
+        'wv': L.dense_schema(d, e, ('embed', 'qkv_out')),
+        'wo': L.dense_schema(cfg.attn_out_size, d, ('qkv_out', 'embed')),
+    }
+    if cfg.qk_norm:
+        sch['q_norm'] = {'scale': ParamSpec((cfg.head_dim,), (None,), 'ones')}
+        sch['k_norm'] = {'scale': ParamSpec((cfg.head_dim,), (None,), 'ones')}
+    return sch
+
+
+# ============================================== the part precompute removes
+def compute_qkv(params, x_normed: jax.Array, cfg: ModelConfig
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Project LN(x) -> (q, k, v), flat head layout, PRE-RoPE.
+
+    Position-independent by construction (RoPE is applied later) — this is
+    exactly the computation the paper moves into the embedding table.
+    """
+    q = L.dense(params['wq'], x_normed)
+    k = L.dense(params['wk'], x_normed)
+    v = L.dense(params['wv'], x_normed)
+    if cfg.qk_norm:  # per-head RMSNorm, also position-independent -> foldable
+        B = q.shape[:-1]
+        q = L.rmsnorm(q.reshape(*B, cfg.num_heads, cfg.head_dim),
+                      params['q_norm']['scale']).reshape(*B, -1)
+        k = L.rmsnorm(k.reshape(*B, cfg.num_kv_heads, cfg.head_dim),
+                      params['k_norm']['scale']).reshape(*B, -1)
+    return q, k, v
+
+
+# ============================================================ full-seq core
+BLOCKED_THRESHOLD = 2048     # use blocked softmax attention for S >= this
+BLOCK_Q = 512
+BLOCK_K = 512
+
+
+def attention_core(q: jax.Array, k: jax.Array, v: jax.Array,
+                   positions: jax.Array, cfg: ModelConfig, *,
+                   rope_theta, window: int = 0,
+                   causal: bool = True, rules=None) -> jax.Array:
+    """Dispatch: naive O(S^2)-memory core for short sequences (tests), the
+    blocked flash-style core for long ones (train_4k/prefill_32k at scale)."""
+    if q.shape[1] >= BLOCKED_THRESHOLD and causal:
+        return blocked_attention_core(q, k, v, positions, cfg,
+                                      rope_theta=rope_theta, window=window,
+                                      rules=rules)
+    return naive_attention_core(q, k, v, positions, cfg,
+                                rope_theta=rope_theta, window=window,
+                                causal=causal)
+
+
+def naive_attention_core(q: jax.Array, k: jax.Array, v: jax.Array,
+                         positions: jax.Array, cfg: ModelConfig, *,
+                         rope_theta, window: int = 0,
+                         causal: bool = True) -> jax.Array:
+    """RoPE + masked softmax attention over a full sequence (train / prefill).
+
+    q: (B,S,q_size) flat; k,v: (B,S,e) flat; positions: (B,S) int32.
+    Returns (B,S,attn_out_size) flat — caller applies the output projection.
+    """
+    B, S = q.shape[0], q.shape[1]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if cfg.pos == 'rope':
+        q = L.apply_rope(q, positions, rope_theta)
+        k = L.apply_rope(k, positions, rope_theta)
+    G = H // KV
+    q = q.reshape(B, S, KV, G, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum('bqkgd,bskd->bkgqs', q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    i = positions[:, None, None, :, None]          # query positions
+    j = positions[:, None, None, None, :]          # key positions
+    mask = jnp.ones((B, 1, 1, S, S), bool)
+    if causal:
+        mask &= (j <= i)
+    if window:
+        mask &= (i - j) < window
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    ctx = jnp.einsum('bkgqs,bskd->bqkgd', probs, v)
+    return ctx.reshape(B, S, H * hd)
+
+
+def blocked_attention_core(q: jax.Array, k: jax.Array, v: jax.Array,
+                           positions: jax.Array, cfg: ModelConfig, *,
+                           rope_theta, window: int = 0,
+                           block_q: int = BLOCK_Q,
+                           block_k: int = BLOCK_K, rules=None) -> jax.Array:
+    """Flash-style blocked causal attention: O(S·block) memory.
+
+    - outer ``lax.map`` over query blocks, inner ``lax.scan`` over KV blocks
+      with running (max, sum, acc) — never materialises S x S scores;
+    - sliding-window layers slice a static (window + block_q)-long KV span
+      per query block (true FLOP savings, not just masking);
+    - wrapped in ``jax.checkpoint`` by callers' remat policy so backward
+      recomputes blockwise.
+
+    This is the pure-JAX mirror of kernels/flash_attention.py (the Pallas
+    TPU kernel); tests assert all three agree.
+    """
+    B, S = q.shape[0], q.shape[1]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // KV
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    # NOTE (§Perf hillclimb-2, refuted): explicitly pinning q/k/v shardings
+    # here (bf16 reshard before RoPE) INCREASED all-gather traffic 2x —
+    # the partitioner already merges the reshape gather with RoPE; forcing
+    # an extra boundary split it into two reshards. Kept unpinned.
+    if cfg.pos == 'rope':
+        q = L.apply_rope(q, positions, rope_theta)
+        k = L.apply_rope(k, positions, rope_theta)
+    scale = hd ** -0.5
+
+    # pad S to a block multiple; padded key positions get +BIG so the causal
+    # mask (j <= i) rejects them everywhere
+    BIG = jnp.int32(2 ** 30)
+    import math as _math
+    bq, bk = min(block_q, S), min(block_k, S)
+    lcm = _math.lcm(bq, bk)
+    Sp = -(-S // lcm) * lcm
+    pad = Sp - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_q = jnp.pad(positions, ((0, 0), (0, pad)))
+        pos_k = jnp.pad(positions, ((0, 0), (0, pad)), constant_values=BIG)
+    else:
+        pos_q = pos_k = positions
+    q = q.reshape(B, Sp, KV, G, hd)
+
+    nQ = Sp // bq
+    if window:
+        span = (-(-(window + bq) // bk)) * bk      # static KV span per q blk
+        span = min(span, Sp)
+    else:
+        span = Sp
+    nK = span // bk
+
+    @jax.checkpoint
+    def one_q_block(i):
+        # checkpointed so lax.map's backward recomputes each query block's
+        # inner KV scan instead of saving per-step probabilities (which would
+        # re-materialise S x S memory during the layer's backward pass)
+        qi = jax.lax.dynamic_slice_in_dim(q, i * bq, bq, axis=1)
+        pqi = jax.lax.dynamic_slice_in_dim(pos_q, i * bq, bq, axis=1)
+        if window:
+            start = jnp.clip(i * bq + bq - span, 0, Sp - span)
+        else:
+            start = 0
+        ks = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+        pks = jax.lax.dynamic_slice_in_dim(pos_k, start, span, axis=1)
+        kb = ks.reshape(B, nK, bk, KV, hd).transpose(1, 0, 2, 3, 4)
+        vb = vs.reshape(B, nK, bk, KV, hd).transpose(1, 0, 2, 3, 4)
+        pb = pks.reshape(B, nK, bk).transpose(1, 0, 2)
+
+        m0 = jnp.full((B, KV, G, bq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, bq, KV, G, hd), jnp.float32)
+
+        def body(carry, xs):
+            m, l, acc = carry
+            kj, vj, pj = xs
+            s = jnp.einsum('bqkgd,bskd->bkgqs', qi.astype(jnp.float32),
+                           kj.astype(jnp.float32)) * scale
+            mask = (pj[:, None, None, None, :]
+                    <= pqi[:, None, None, :, None])
+            if window:
+                mask &= (pqi[:, None, None, :, None]
+                         - pj[:, None, None, None, :]) < window
+            s = jnp.where(mask, s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask, p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr.transpose(0, 3, 1, 2)[..., None] \
+                + jnp.einsum('bkgqs,bskd->bqkgd', p, vj.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, pb))
+        lt = l.transpose(0, 3, 1, 2)[..., None]
+        return (acc / jnp.maximum(lt, 1e-30)).astype(v.dtype)
+
+    out = jax.lax.map(one_q_block, jnp.arange(nQ))       # (nQ,B,bq,KV,G,hd)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sp, H * hd)
+    return out[:, :S]
+
+
+def cross_attention_core(q: jax.Array, k: jax.Array, v: jax.Array,
+                         cfg: ModelConfig) -> jax.Array:
+    """Encoder-decoder cross attention: no mask, no RoPE on either side."""
+    B, S = q.shape[0], q.shape[1]
+    Sk = k.shape[1]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = q.reshape(B, S, KV, H // KV, hd)
+    k = k.reshape(B, Sk, KV, hd)
+    v = v.reshape(B, Sk, KV, hd)
+    scores = jnp.einsum('bqkgd,bskd->bkgqs', q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * hd ** -0.5
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    ctx = jnp.einsum('bkgqs,bskd->bqkgd', probs, v)
+    return ctx.reshape(B, S, H * hd)
+
+
+# ================================================================== KV cache
+def cache_len(window: int, seq_len: int) -> int:
+    return min(window, seq_len) if window else seq_len
+
+
+def make_cache(cfg: ModelConfig, batch: int, seq_len: int, *, window: int = 0,
+               dtype=jnp.bfloat16, quant: bool = False
+               ) -> Dict[str, jax.Array]:
+    """KV cache. ``quant=True``: int8 entries + per-(token, head) bf16 scales
+    — halves decode's dominant HBM-read term (§Perf hillclimb-3)."""
+    Sc = cache_len(window, seq_len)
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    cache = {
+        'k': jnp.zeros((batch, Sc, KV, hd), jnp.int8 if quant else dtype),
+        'v': jnp.zeros((batch, Sc, KV, hd), jnp.int8 if quant else dtype),
+        'pos': jnp.full((batch, Sc), -1, jnp.int32),
+    }
+    if quant:
+        cache['k_scale'] = jnp.zeros((batch, Sc, KV), jnp.bfloat16)
+        cache['v_scale'] = jnp.zeros((batch, Sc, KV), jnp.bfloat16)
+    return cache
+
+
+def cache_abstract(cfg: ModelConfig, batch: int, seq_len: int, rules, *,
+                   window: int = 0, dtype=jnp.bfloat16, quant: bool = False):
+    """ShapeDtypeStructs (with shardings) for the dry-run decode inputs."""
+    from repro.sharding import logical_sds
+    Sc = cache_len(window, seq_len)
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    kv_dt = jnp.int8 if quant else dtype
+    out = {
+        'k': logical_sds((batch, Sc, KV, hd), kv_dt,
+                         ('batch', 'cache_seq', 'kv_heads', None), rules),
+        'v': logical_sds((batch, Sc, KV, hd), kv_dt,
+                         ('batch', 'cache_seq', 'kv_heads', None), rules),
+        'pos': logical_sds((batch, Sc), jnp.int32, ('batch', 'cache_seq'), rules),
+    }
+    if quant:
+        for nm in ('k_scale', 'v_scale'):
+            out[nm] = logical_sds((batch, Sc, KV), jnp.bfloat16,
+                                  ('batch', 'cache_seq', 'kv_heads'), rules)
+    return out
+
+
+def _quantize(x: jax.Array):
+    """(B,KV,hd) -> int8 values + bf16 per-(B,KV) symmetric scale."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def cache_update(cache: Dict, k_new: jax.Array, v_new: jax.Array,
+                 pos: jax.Array) -> Dict:
+    """Write one decode step (B,1,KV,hd) at ring index pos % cache_len."""
+    Sc = cache['k'].shape[1]
+    idx = (pos % Sc).astype(jnp.int32)                       # (B,)
+    bidx = jnp.arange(cache['k'].shape[0])
+    out = dict(cache)
+    if 'k_scale' in cache:
+        kq, ks = _quantize(k_new[:, 0])
+        vq, vs = _quantize(v_new[:, 0])
+        out['k'] = cache['k'].at[bidx, idx].set(kq)
+        out['v'] = cache['v'].at[bidx, idx].set(vq)
+        out['k_scale'] = cache['k_scale'].at[bidx, idx].set(ks)
+        out['v_scale'] = cache['v_scale'].at[bidx, idx].set(vs)
+    else:
+        out['k'] = cache['k'].at[bidx, idx].set(
+            k_new[:, 0].astype(cache['k'].dtype))
+        out['v'] = cache['v'].at[bidx, idx].set(
+            v_new[:, 0].astype(cache['v'].dtype))
+    out['pos'] = cache['pos'].at[bidx, idx].set(pos.astype(jnp.int32))
+    return out
+
+
+# ================================================================ decode core
+def decode_attend(q: jax.Array, cache: Dict, pos: jax.Array, cfg: ModelConfig,
+                  *, rope_theta, window: int = 0) -> jax.Array:
+    """One-token attention against the (already updated) cache.
+
+    q: (B,1,q_size) PRE-RoPE flat; pos: (B,) current positions.
+    Entry validity comes from the cache's stored positions, which makes the
+    ring buffer correct without tracking wrap-arounds explicitly.
+    """
+    B = q.shape[0]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = q.reshape(B, 1, H, hd)
+    if cfg.pos == 'rope':
+        q = L.apply_rope(q, pos[:, None], rope_theta)
+    q = q.reshape(B, KV, H // KV, hd)
+    if 'k_scale' in cache:
+        # int8 cache: contract against raw int8 values, fold the per-token
+        # scale into the scores afterwards (reads stay 1 byte/element)
+        scores = jnp.einsum('bkgd,bskd->bkgs', q.astype(jnp.float32),
+                            cache['k'].astype(jnp.float32))
+        scores = scores * cache['k_scale'].astype(jnp.float32) \
+            .transpose(0, 2, 1)[:, :, None, :] * hd ** -0.5
+    else:
+        scores = jnp.einsum('bkgd,bskd->bkgs', q.astype(jnp.float32),
+                            cache['k'].astype(jnp.float32)) * hd ** -0.5
+    cp = cache['pos'][:, None, None, :]                      # (B,1,1,Sc)
+    valid = (cp >= 0) & (cp <= pos[:, None, None, None])
+    if window:
+        valid &= (pos[:, None, None, None] - cp) < window
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    if 'k_scale' in cache:
+        pv = probs * cache['v_scale'].astype(jnp.float32) \
+            .transpose(0, 2, 1)[:, :, None, :]
+        ctx = jnp.einsum('bkgs,bskd->bkgd', pv,
+                         cache['v'].astype(jnp.float32)).astype(q.dtype)
+    else:
+        ctx = jnp.einsum('bkgs,bskd->bkgd', probs.astype(cache['v'].dtype),
+                         cache['v'])
+    return ctx.reshape(B, 1, H * hd)
+
+
+def decode_step(params, x_normed: jax.Array, cache: Dict, pos: jax.Array,
+                cfg: ModelConfig, *, rope_theta, window: int = 0,
+                qkv: Optional[Tuple] = None) -> Tuple[jax.Array, Dict]:
+    """Full decode step: (qkv or projections) -> cache write -> attend -> wo.
+
+    ``qkv`` supplies precomputed (q,k,v) rows for the paper's layer-0 path.
+    """
+    if qkv is None:
+        q, k, v = compute_qkv(params, x_normed, cfg)
+    else:
+        q, k, v = qkv
+    B = q.shape[0]
+    k_h = k.reshape(B, 1, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.pos == 'rope':
+        k_h = L.apply_rope(k_h, pos[:, None], rope_theta)
+    v_h = v.reshape(B, 1, cfg.num_kv_heads, cfg.head_dim)
+    cache = cache_update(cache, k_h, v_h, pos)
+    ctx = decode_attend(q, cache, pos, cfg, rope_theta=rope_theta,
+                        window=window)
+    return L.dense(params['wo'], ctx), cache
+
+
+def full_attention(params, x_normed: jax.Array, positions: jax.Array,
+                   cfg: ModelConfig, *, rope_theta, window: int = 0,
+                   qkv: Optional[Tuple] = None, rules=None) -> jax.Array:
+    """Full-sequence attention incl. output projection (train / prefill)."""
+    if qkv is None:
+        q, k, v = compute_qkv(params, x_normed, cfg)
+    else:
+        q, k, v = qkv
+    ctx = attention_core(q, k, v, positions, cfg, rope_theta=rope_theta,
+                         window=window, rules=rules)
+    return L.dense(params['wo'], ctx)

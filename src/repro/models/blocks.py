@@ -1,0 +1,408 @@
+"""Per-layer block assembly for every layer *kind*.
+
+Kinds:
+- 'global' / 'local'    : attention (full-causal / sliding-window) + FFN,
+                          serial or parallel per ``cfg.block_type``; the FFN is
+                          MoE when ``use_moe``; attention is MLA when ``cfg.mla``.
+- 'mlstm' / 'slstm'     : xLSTM recurrent blocks.
+- 'hybrid' / 'hybrid_global' : Hymba parallel attention ∥ mamba heads
+                          (windowed / full attention).
+
+Every block exposes three faces:
+- ``block_apply_full``  : train / prefill over a whole sequence
+- ``block_decode``      : one-token step against block state (KV cache / SSM state)
+- ``block_preproj``     : the position-independent projections of this block —
+                          THE PAPER: what gets moved into the embedding table
+                          for layer 0 (see repro.core.precompute).
+
+``pre`` (a dict of named precomputed pieces) short-circuits the projections in
+apply/decode; its layout per kind is defined by :func:`preproj_layout`.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mla as M
+from repro.models import ssm as S
+from repro.models.ffn import ffn_schema, ffn_apply
+from repro.models.moe import moe_schema, moe_apply
+
+ATTN_KINDS = ('global', 'local')
+HYBRID_KINDS = ('hybrid', 'hybrid_global')
+
+
+def kind_window(cfg: ModelConfig, kind: str) -> int:
+    if kind in ('local', 'hybrid'):
+        return cfg.window
+    return 0
+
+
+def kind_theta(cfg: ModelConfig, kind: str) -> float:
+    if kind == 'local' and cfg.rope_theta_local:
+        return cfg.rope_theta_local
+    return cfg.rope_theta
+
+
+# ==================================================================== schema
+def block_schema(cfg: ModelConfig, kind: str, use_moe: bool) -> Dict:
+    d = cfg.d_model
+    sch: Dict = {'ln1': L.norm_schema(d, cfg.norm)}
+    if kind in ATTN_KINDS:
+        sch['attn'] = M.mla_schema(cfg) if cfg.mla else A.attention_schema(cfg)
+        sch['ln2'] = L.norm_schema(d, cfg.norm)
+        if use_moe:
+            sch['moe'] = moe_schema(cfg)
+        else:
+            d_ff = cfg.d_ff
+            if cfg.moe and cfg.moe.dense_d_ff:
+                d_ff = cfg.moe.dense_d_ff
+            sch['ffn'] = ffn_schema(d, d_ff, glu=cfg.glu)
+    elif kind in HYBRID_KINDS:
+        attn = A.attention_schema(cfg)
+        del attn['wo']                       # shared output proj after combine
+        sch['attn'] = attn
+        sch['mamba'] = S.mamba_schema(cfg)
+        ed = cfg.num_heads * cfg.head_dim
+        sch['norm_attn'] = {'scale': L.ParamSpec((ed,), ('embed_act',), 'ones')}
+        sch['norm_ssm'] = {'scale': L.ParamSpec((ed,), ('embed_act',), 'ones')}
+        sch['w_out'] = L.dense_schema(ed, d, ('qkv_out', 'embed'))
+        sch['ln2'] = L.norm_schema(d, cfg.norm)
+        sch['ffn'] = ffn_schema(d, cfg.d_ff, glu=cfg.glu)
+    elif kind == 'mlstm':
+        sch['core'] = S.mlstm_schema(cfg)
+    elif kind == 'slstm':
+        sch['core'] = S.slstm_schema(cfg)
+    else:
+        raise ValueError(kind)
+    return sch
+
+
+# ====================================================== precompute projections
+def block_preproj(params, x: jax.Array, cfg: ModelConfig, kind: str,
+                  use_moe: bool) -> Dict[str, jax.Array]:
+    """Position-independent first-layer computation on raw embeddings ``x``.
+
+    Returns named pieces; 'x' (serial) or 's' (parallel, = x + FFN(LN2(x)),
+    skip folded in per the paper) is always first.
+    """
+    xn = L.norm_apply(params['ln1'], x, cfg.norm)
+    if kind in ATTN_KINDS:
+        if cfg.mla:
+            q, ckv, kpe = M.compute_latents(params['attn'], xn, cfg)
+            return {'x': x, 'q': q, 'ckv': ckv, 'kpe': kpe}
+        q, k, v = A.compute_qkv(params['attn'], xn, cfg)
+        if cfg.block_type == 'parallel' and not use_moe:
+            xn2 = L.norm_apply(params['ln2'], x, cfg.norm)
+            s = x + ffn_apply(params['ffn'], xn2, act=cfg.act)
+            return {'s': s, 'q': q, 'k': k, 'v': v}
+        if cfg.block_type == 'parallel' and use_moe:
+            # parallel MoE (hypothetical parallel Mixtral, paper §3): the
+            # expert FFN is token-wise deterministic -> precomputable too.
+            xn2 = L.norm_apply(params['ln2'], x, cfg.norm)
+            y, _ = moe_apply(params['moe'], xn2[None] if xn2.ndim == 2 else xn2,
+                             cfg)
+            y = y[0] if xn2.ndim == 2 else y
+            return {'s': x + y, 'q': q, 'k': k, 'v': v}
+        return {'x': x, 'q': q, 'k': k, 'v': v}
+    if kind in HYBRID_KINDS:
+        q, k, v = A.compute_qkv(params['attn'], xn, cfg)
+        mp = S.mamba_preproj(params['mamba'], xn)
+        return {'x': x, 'q': q, 'k': k, 'v': v,
+                'x_in': mp['x_in'], 'gate': mp['gate']}
+    if kind == 'mlstm':
+        mp = S.mlstm_preproj(params['core'], xn)
+        return {'x': x, 'u1': mp['u1'], 'u2': mp['u2'], 'v': mp['v'],
+                'ifg': mp['ifg']}
+    if kind == 'slstm':
+        sp = S.slstm_preproj(params['core'], xn)
+        return {'x': x, 'z_in': sp['z_in'], 'o_in': sp['o_in']}
+    raise ValueError(kind)
+
+
+def preproj_layout(cfg: ModelConfig, kind: str, use_moe: bool
+                   ) -> Tuple[Tuple[str, int], ...]:
+    """(name, width) pieces of one precomputed-table row, in storage order."""
+    d, q, e = cfg.d_model, cfg.q_size, cfg.kv_size
+    if kind in ATTN_KINDS:
+        if cfg.mla:
+            m = cfg.mla
+            return (('x', d), ('q', q), ('ckv', m.kv_lora_rank),
+                    ('kpe', m.qk_rope_dim))
+        first = 's' if cfg.block_type == 'parallel' else 'x'
+        return ((first, d), ('q', q), ('k', e), ('v', e))
+    if kind in HYBRID_KINDS:
+        ed = cfg.num_heads * cfg.head_dim
+        return (('x', d), ('q', q), ('k', e), ('v', e),
+                ('x_in', ed), ('gate', ed))
+    if kind == 'mlstm':
+        ed = cfg.ssm.expand * cfg.d_model
+        H = cfg.ssm.num_ssm_heads
+        return (('x', d), ('u1', ed), ('u2', ed), ('v', ed), ('ifg', 2 * H))
+    if kind == 'slstm':
+        return (('x', d), ('z_in', d), ('o_in', d))
+    raise ValueError(kind)
+
+
+# ================================================================== full seq
+def block_apply_full(params, h: jax.Array, positions: jax.Array,
+                     cfg: ModelConfig, kind: str, use_moe: bool, *,
+                     pre: Optional[Dict] = None, rules=None
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """-> (h_out, aux_loss). ``pre`` short-circuits layer-0 projections."""
+    theta = kind_theta(cfg, kind)
+    window = kind_window(cfg, kind)
+    aux = jnp.zeros((), jnp.float32)
+
+    def cstr(t):
+        # keep per-branch activations head-sharded: without this the SPMD
+        # partitioner all-gathers the (B,S,ed) branch outputs every layer
+        # (hymba prefill: 30 GiB/step of avoidable all-gather traffic)
+        return rules.constrain(t, ('batch', 'seq', 'qkv_out')) \
+            if rules is not None else t
+
+    if kind in ATTN_KINDS:
+        if cfg.block_type == 'parallel':
+            if pre is not None:
+                ctx = A.attention_core(pre['q'], pre['k'], pre['v'], positions,
+                                       cfg, rope_theta=theta, window=window)
+                return pre['s'] + L.dense(params['attn']['wo'], ctx), aux
+            xn = L.norm_apply(params['ln1'], h, cfg.norm)
+            attn_out = A.full_attention(params['attn'], xn, positions, cfg,
+                                        rope_theta=theta, window=window)
+            xn2 = L.norm_apply(params['ln2'], h, cfg.norm)
+            if use_moe:
+                f, aux = moe_apply(params['moe'], xn2, cfg)
+            else:
+                f = ffn_apply(params['ffn'], xn2, act=cfg.act)
+            return h + attn_out + f, aux
+        # serial
+        if pre is not None:
+            if cfg.mla:
+                attn_out = M.mla_full(params['attn'], None, positions, cfg,
+                                      rope_theta=theta,
+                                      latents=(pre['q'], pre['ckv'],
+                                               pre['kpe']))
+            else:
+                attn_out = A.full_attention(
+                    params['attn'], None, positions, cfg, rope_theta=theta,
+                    window=window, qkv=(pre['q'], pre['k'], pre['v']))
+        else:
+            xn = L.norm_apply(params['ln1'], h, cfg.norm)
+            if cfg.mla:
+                attn_out = M.mla_full(params['attn'], xn, positions, cfg,
+                                      rope_theta=theta)
+            else:
+                attn_out = A.full_attention(params['attn'], xn, positions, cfg,
+                                            rope_theta=theta, window=window)
+        h = h + attn_out
+        xn2 = L.norm_apply(params['ln2'], h, cfg.norm)
+        if use_moe:
+            f, aux = moe_apply(params['moe'], xn2, cfg,
+                               router_mode='softmax_topk' if cfg.moe.num_shared
+                               else 'topk_softmax')
+            f = f
+        else:
+            f = ffn_apply(params['ffn'], xn2, act=cfg.act)
+        return h + f, aux
+
+    if kind in HYBRID_KINDS:
+        if pre is not None:
+            qkv = (pre['q'], pre['k'], pre['v'])
+            mpre = {'x_in': pre['x_in'], 'gate': pre['gate']}
+            xn = None
+        else:
+            xn = L.norm_apply(params['ln1'], h, cfg.norm)
+            qkv = A.compute_qkv(params['attn'], xn, cfg)
+            mpre = None
+        ctx = cstr(A.attention_core(*qkv, positions, cfg, rope_theta=theta,
+                                    window=window, rules=rules))
+        y_ssm = cstr(S.mamba_apply(params['mamba'], xn, cfg, pre=mpre,
+                                   rules=rules))
+        mix = cstr(0.5 * (L.rmsnorm(ctx, params['norm_attn']['scale'])
+                          + L.rmsnorm(y_ssm, params['norm_ssm']['scale'])))
+        h = h + L.dense(params['w_out'], mix)
+        xn2 = L.norm_apply(params['ln2'], h, cfg.norm)
+        return h + ffn_apply(params['ffn'], xn2, act=cfg.act), aux
+
+    if kind == 'mlstm':
+        if pre is not None:
+            y = S.mlstm_apply(params['core'], None, cfg,
+                              pre={k: pre[k] for k in
+                                   ('u1', 'u2', 'v', 'ifg')})
+        else:
+            xn = L.norm_apply(params['ln1'], h, cfg.norm)
+            y = S.mlstm_apply(params['core'], xn, cfg)
+        return h + y, aux
+
+    if kind == 'slstm':
+        xn = L.norm_apply(params['ln1'], h, cfg.norm)
+        if pre is not None:
+            spre = {'z_in': pre['z_in'], 'o_in': pre['o_in'], 'xn': xn}
+            y = S.slstm_apply(params['core'], None, cfg, pre=spre)
+        else:
+            y = S.slstm_apply(params['core'], xn, cfg)
+        return h + y, aux
+    raise ValueError(kind)
+
+
+# ===================================================================== state
+def block_make_state(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
+                     dtype=jnp.bfloat16, quant: bool = False) -> Dict:
+    if kind in ATTN_KINDS:
+        if cfg.mla:
+            return M.mla_make_cache(cfg, batch, seq_len, dtype)
+        return A.make_cache(cfg, batch, seq_len,
+                            window=kind_window(cfg, kind), dtype=dtype,
+                            quant=quant)
+    if kind in HYBRID_KINDS:
+        return {'attn': A.make_cache(cfg, batch, seq_len,
+                                     window=kind_window(cfg, kind),
+                                     dtype=dtype, quant=quant),
+                'ssm': S.mamba_init_state(cfg, batch)}
+    if kind == 'mlstm':
+        return S.mlstm_init_state(cfg, batch)
+    if kind == 'slstm':
+        return S.slstm_init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def block_state_abstract(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
+                         rules, dtype=jnp.bfloat16, quant: bool = False):
+    """ShapeDtypeStruct version of block_make_state for the dry-run."""
+    from repro.sharding import logical_sds
+
+    def recur_sds(tree, batch_axis='batch'):
+        return jax.tree_util.tree_map(
+            lambda x: logical_sds(x.shape, x.dtype,
+                                  (batch_axis,) + (None,) * (x.ndim - 1),
+                                  rules), tree)
+
+    if kind in ATTN_KINDS:
+        if cfg.mla:
+            return M.mla_cache_abstract(cfg, batch, seq_len, rules, dtype)
+        return A.cache_abstract(cfg, batch, seq_len, rules,
+                                window=kind_window(cfg, kind), dtype=dtype,
+                                quant=quant)
+    if kind in HYBRID_KINDS:
+        ssm_st = jax.eval_shape(lambda: S.mamba_init_state(cfg, batch))
+        return {'attn': A.cache_abstract(cfg, batch, seq_len, rules,
+                                         window=kind_window(cfg, kind),
+                                         dtype=dtype, quant=quant),
+                'ssm': recur_sds(ssm_st)}
+    if kind == 'mlstm':
+        st = jax.eval_shape(lambda: S.mlstm_init_state(cfg, batch))
+        return recur_sds(st)
+    if kind == 'slstm':
+        st = jax.eval_shape(lambda: S.slstm_init_state(cfg, batch))
+        return recur_sds(st)
+    raise ValueError(kind)
+
+
+# ==================================================================== decode
+def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
+                 cfg: ModelConfig, kind: str, use_moe: bool, *,
+                 pre: Optional[Dict] = None
+                 ) -> Tuple[jax.Array, Dict]:
+    """One-token step. h: (B,1,d); pos: (B,). -> (h_out, new_state)."""
+    theta = kind_theta(cfg, kind)
+    window = kind_window(cfg, kind)
+
+    if kind in ATTN_KINDS:
+        if cfg.block_type == 'parallel':
+            if pre is not None:
+                s, qkv = pre['s'], (pre['q'], pre['k'], pre['v'])
+                attn_out, state = A.decode_step(params['attn'], None, state,
+                                                pos, cfg, rope_theta=theta,
+                                                window=window, qkv=qkv)
+                return s + attn_out, state
+            xn = L.norm_apply(params['ln1'], h, cfg.norm)
+            attn_out, state = A.decode_step(params['attn'], xn, state, pos,
+                                            cfg, rope_theta=theta,
+                                            window=window)
+            xn2 = L.norm_apply(params['ln2'], h, cfg.norm)
+            if use_moe:
+                f, _ = moe_apply(params['moe'], xn2, cfg)
+            else:
+                f = ffn_apply(params['ffn'], xn2, act=cfg.act)
+            return h + attn_out + f, state
+        # serial
+        if pre is not None:
+            if cfg.mla:
+                attn_out, state = M.mla_decode_step(
+                    params['attn'], None, state, pos, cfg, rope_theta=theta,
+                    latents=(pre['q'], pre['ckv'], pre['kpe']))
+            else:
+                attn_out, state = A.decode_step(
+                    params['attn'], None, state, pos, cfg, rope_theta=theta,
+                    window=window, qkv=(pre['q'], pre['k'], pre['v']))
+        else:
+            xn = L.norm_apply(params['ln1'], h, cfg.norm)
+            if cfg.mla:
+                attn_out, state = M.mla_decode_step(params['attn'], xn, state,
+                                                    pos, cfg, rope_theta=theta)
+            else:
+                attn_out, state = A.decode_step(params['attn'], xn, state,
+                                                pos, cfg, rope_theta=theta,
+                                                window=window)
+        h = h + attn_out
+        xn2 = L.norm_apply(params['ln2'], h, cfg.norm)
+        if use_moe:
+            f, _ = moe_apply(params['moe'], xn2, cfg,
+                             router_mode='softmax_topk' if cfg.moe.num_shared
+                             else 'topk_softmax')
+        else:
+            f = ffn_apply(params['ffn'], xn2, act=cfg.act)
+        return h + f, state
+
+    if kind in HYBRID_KINDS:
+        if pre is not None:
+            qkv = (pre['q'], pre['k'], pre['v'])
+            mpre = {'x_in': pre['x_in'], 'gate': pre['gate']}
+            xn = None
+        else:
+            xn = L.norm_apply(params['ln1'], h, cfg.norm)
+            qkv = A.compute_qkv(params['attn'], xn, cfg)
+            mpre = None
+        q, k, v = qkv
+        B = q.shape[0]
+        k_h = k.reshape(B, 1, cfg.num_kv_heads, cfg.head_dim)
+        if cfg.pos == 'rope':
+            k_h = L.apply_rope(k_h, pos[:, None], theta)
+        v_h = v.reshape(B, 1, cfg.num_kv_heads, cfg.head_dim)
+        acache = A.cache_update(state['attn'], k_h, v_h, pos)
+        ctx = A.decode_attend(q, acache, pos, cfg, rope_theta=theta,
+                              window=window)
+        y_ssm, sstate = S.mamba_step(params['mamba'], xn, state['ssm'], cfg,
+                                     pre=mpre)
+        mix = 0.5 * (L.rmsnorm(ctx, params['norm_attn']['scale'])
+                     + L.rmsnorm(y_ssm, params['norm_ssm']['scale']))
+        h = h + L.dense(params['w_out'], mix)
+        xn2 = L.norm_apply(params['ln2'], h, cfg.norm)
+        return h + ffn_apply(params['ffn'], xn2, act=cfg.act), \
+            {'attn': acache, 'ssm': sstate}
+
+    if kind == 'mlstm':
+        if pre is not None:
+            y, state = S.mlstm_step(params['core'], None, state, cfg,
+                                    pre={k: pre[k] for k in
+                                         ('u1', 'u2', 'v', 'ifg')})
+        else:
+            xn = L.norm_apply(params['ln1'], h, cfg.norm)
+            y, state = S.mlstm_step(params['core'], xn, state, cfg)
+        return h + y, state
+
+    if kind == 'slstm':
+        xn = L.norm_apply(params['ln1'], h, cfg.norm)
+        if pre is not None:
+            spre = {'z_in': pre['z_in'], 'o_in': pre['o_in'], 'xn': xn}
+            y, state = S.slstm_step(params['core'], None, state, cfg, pre=spre)
+        else:
+            y, state = S.slstm_step(params['core'], xn, state, cfg)
+        return h + y, state
+    raise ValueError(kind)

@@ -1,0 +1,40 @@
+"""Feed-forward networks: 2-layer MLP and GLU variants (SwiGLU etc.).
+
+For *parallel* blocks (Pythia/GPT-J/PaLM) the whole FFN output per token is a
+pure function of LN(embedding) — the paper precomputes it and folds the skip
+connection in (``s = x + FFN(LN(x))``), see core/precompute.py.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+
+
+def ffn_schema(d: int, d_ff: int, *, glu: bool = True, bias: bool = False) -> Dict:
+    sch = {
+        'w_up': L.dense_schema(d, d_ff, ('embed', 'mlp'), bias=bias),
+        'w_down': L.dense_schema(d_ff, d, ('mlp', 'embed'), bias=bias),
+    }
+    if glu:
+        sch['w_gate'] = L.dense_schema(d, d_ff, ('embed', 'mlp'), bias=bias)
+    return sch
+
+
+def ffn_apply(params, x: jax.Array, *, act: str = 'silu') -> jax.Array:
+    a = L.activation(act)
+    up = L.dense(params['w_up'], x)
+    if 'w_gate' in params:
+        h = a(L.dense(params['w_gate'], x)) * up
+    else:
+        h = a(up)
+    return L.dense(params['w_down'], h)
+
+
+def ffn_num_weights(d: int, d_ff: int, *, glu: bool = True) -> int:
+    """(2 or 3)·d·d_ff — matches the paper's weight accounting."""
+    return (3 if glu else 2) * d * d_ff

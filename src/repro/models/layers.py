@@ -1,0 +1,238 @@
+"""Parameter schema machinery + primitive layers.
+
+Models are pure functions over plain-dict parameter pytrees. Each model module
+exposes:
+
+- ``*_schema(cfg) -> dict``   : nested dict of :class:`ParamSpec` leaves
+- ``*_apply(params, x, ...)`` : the forward computation
+
+From one schema we derive real initialised parameters (``init_params``), the
+abstract ShapeDtypeStructs with NamedShardings for the dry-run
+(``abstract_params``), and the in/out shardings for jit (``param_shardings``).
+This single-source-of-truth approach is what lets the 405B config lower without
+ever allocating a tensor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import Rules, logical_sds
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical_axes: Tuple[Optional[str], ...]
+    init: str = 'fan_in'            # 'fan_in' | 'normal' | 'zeros' | 'ones'
+    init_scale: float = 1.0
+    dtype: Optional[str] = None     # None -> model default dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), (
+            f'{self.shape} vs {self.logical_axes}')
+
+
+def _is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _map_schema(fn, schema):
+    """Map fn over ParamSpec leaves of a nested dict/list schema."""
+    if _is_spec(schema):
+        return fn(schema)
+    if isinstance(schema, dict):
+        return {k: _map_schema(fn, v) for k, v in schema.items()}
+    if isinstance(schema, (list, tuple)):
+        return type(schema)(_map_schema(fn, v) for v in schema)
+    raise TypeError(f'bad schema node: {type(schema)}')
+
+
+def init_params(schema, key: jax.Array, default_dtype: str = 'float32'):
+    """Materialise real parameters from a schema (CPU-friendly)."""
+    leaves = []
+    _map_schema(leaves.append, schema)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    it = iter(range(len(leaves)))
+
+    def make(spec: ParamSpec):
+        i = next(it)
+        dtype = jnp.dtype(spec.dtype or default_dtype)
+        if spec.init == 'zeros':
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == 'ones':
+            return jnp.ones(spec.shape, dtype)
+        if spec.init == 'normal':
+            return (jax.random.normal(keys[i], spec.shape, jnp.float32)
+                    * spec.init_scale).astype(dtype)
+        if spec.init == 'fan_in':
+            fan_in = spec.shape[0] if len(spec.shape) == 1 else int(
+                np.prod(spec.shape[:-1]))
+            std = spec.init_scale / math.sqrt(max(fan_in, 1))
+            return (jax.random.normal(keys[i], spec.shape, jnp.float32)
+                    * std).astype(dtype)
+        raise ValueError(spec.init)
+
+    return _map_schema(make, schema)
+
+
+def abstract_params(schema, rules: Rules, default_dtype: str = 'bfloat16'):
+    """ShapeDtypeStruct tree with NamedShardings — zero allocation."""
+    def make(spec: ParamSpec):
+        return logical_sds(spec.shape, jnp.dtype(spec.dtype or default_dtype),
+                           spec.logical_axes, rules)
+    return _map_schema(make, schema)
+
+
+def param_shardings(schema, rules: Rules):
+    return _map_schema(
+        lambda s: rules.sharding_for_shape(s.shape, s.logical_axes), schema)
+
+
+def param_specs_flat(schema) -> Dict[str, ParamSpec]:
+    out: Dict[str, ParamSpec] = {}
+
+    def walk(node, path):
+        if _is_spec(node):
+            out['/'.join(path)] = node
+        elif isinstance(node, dict):
+            for k, v in node.items():
+                walk(v, path + [str(k)])
+        else:
+            for i, v in enumerate(node):
+                walk(v, path + [str(i)])
+    walk(schema, [])
+    return out
+
+
+def count_params(schema) -> int:
+    return sum(int(np.prod(s.shape)) for s in param_specs_flat(schema).values())
+
+
+def stack_schema(schema, n: int, axis_name: Optional[str] = 'layers'):
+    """Add a leading stacking dimension of size n to every leaf (for scan)."""
+    def f(s: ParamSpec):
+        return ParamSpec((n,) + s.shape, (axis_name,) + s.logical_axes,
+                         s.init, s.init_scale, s.dtype)
+    return _map_schema(f, schema)
+
+
+def tree_slice(tree, i):
+    """Select index i along the leading (stacked) axis of every leaf."""
+    return jax.tree_util.tree_map(lambda x: x[i], tree)
+
+
+# ===================================================================== norms
+def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
+            scale_plus_one: bool = False) -> jax.Array:
+    """RMSNorm in fp32, cast back to input dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    s = scale.astype(jnp.float32)
+    if scale_plus_one:
+        s = s + 1.0
+    return (y * s).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              *, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_schema(d: int, kind: str) -> Dict[str, ParamSpec]:
+    if kind == 'rmsnorm':
+        return {'scale': ParamSpec((d,), ('embed_act',), 'ones')}
+    return {'scale': ParamSpec((d,), ('embed_act',), 'ones'),
+            'bias': ParamSpec((d,), ('embed_act',), 'zeros')}
+
+
+def norm_apply(params, x, kind: str) -> jax.Array:
+    if kind == 'rmsnorm':
+        return rmsnorm(x, params['scale'])
+    return layernorm(x, params['scale'], params['bias'])
+
+
+# ==================================================================== linear
+def dense_schema(d_in: int, d_out: int, axes: Tuple[Optional[str], Optional[str]],
+                 *, bias: bool = False, init_scale: float = 1.0) -> Dict[str, ParamSpec]:
+    sch = {'w': ParamSpec((d_in, d_out), axes, 'fan_in', init_scale)}
+    if bias:
+        sch['b'] = ParamSpec((d_out,), (axes[1],), 'zeros')
+    return sch
+
+
+def dense(params, x: jax.Array) -> jax.Array:
+    y = jnp.einsum('...i,io->...o', x, params['w'])
+    if 'b' in params:
+        y = y + params['b'].astype(y.dtype)
+    return y
+
+
+# ====================================================================== RoPE
+def rope_freqs(head_dim: int, theta) -> jax.Array:
+    """Inverse frequencies; ``theta`` may be a traced scalar (per-layer)."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)                      # (head_dim//2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta) -> jax.Array:
+    """Rotate pairs (half-split convention, llama style).
+
+    x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq).
+    """
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                           # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., seq, hd/2)
+    sin = jnp.sin(ang)[..., None, :]                      # (..., seq, 1, hd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sincos_pos_embedding(seq_len: int, d: int) -> jax.Array:
+    """Classic sinusoidal table (whisper encoder)."""
+    pos = np.arange(seq_len)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    ang = pos / np.power(10000.0, dim / d)
+    out = np.zeros((seq_len, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)
+
+
+# ================================================================= embedding
+def embed_schema(vocab: int, d: int) -> Dict[str, ParamSpec]:
+    return {'table': ParamSpec((vocab, d), ('vocab', 'embed'), 'normal', 0.02)}
+
+
+def embed_lookup(params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params['table'], tokens, axis=0)
+
+
+def unembed(params, x: jax.Array) -> jax.Array:
+    """Tied output head: x @ table.T -> logits over vocab."""
+    return jnp.einsum('...d,vd->...v', x, params['table'])
+
+
+# ================================================================ activations
+def activation(name: str):
+    return {'silu': jax.nn.silu, 'gelu': jax.nn.gelu, 'relu': jax.nn.relu,
+            'gelu_tanh': lambda x: jax.nn.gelu(x, approximate=True)}[name]
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)

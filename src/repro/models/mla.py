@@ -1,0 +1,172 @@
+"""DeepSeek-V2 Multi-head Latent Attention (MLA).
+
+MLA compresses K/V into a low-rank latent ``c_kv`` (kv_lora_rank wide) plus a
+small *decoupled RoPE key* ``k_pe`` shared across heads. Only ``(c_kv, k_pe)``
+is cached — that's the whole point of MLA.
+
+Paper relevance: every layer-0 MLA projection is position-independent —
+``q = W_Q·LN(x)`` (pre-RoPE), ``c_kv = RMSNorm(W_DKV·LN(x))`` and the pre-RoPE
+``k_pe`` — so the paper's precompute generalises: the table row is
+``[x, q, c_kv, k_pe]`` (see core/precompute.py). RoPE on ``q_pe``/``k_pe`` and
+the up-projections W_UK/W_UV (which read the *cache*, not the embedding)
+remain at runtime.
+
+Decode uses the *absorbed* form (W_UK folded into q, W_UV applied after the
+value mix) so per-step work scales with the latent width, and we property-test
+absorbed == non-absorbed.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models.attention import NEG_INF
+from repro.models.layers import ParamSpec
+
+
+def mla_schema(cfg: ModelConfig) -> Dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    dq = m.qk_nope_dim + m.qk_rope_dim
+    sch = {
+        'wq': L.dense_schema(d, H * dq, ('embed', 'qkv_out')),
+        'wdkv': L.dense_schema(d, m.kv_lora_rank + m.qk_rope_dim,
+                               ('embed', None)),
+        'kv_norm': {'scale': ParamSpec((m.kv_lora_rank,), (None,), 'ones')},
+        'wuk': ParamSpec((m.kv_lora_rank, H, m.qk_nope_dim),
+                         (None, 'heads', None), 'fan_in'),
+        'wuv': ParamSpec((m.kv_lora_rank, H, m.v_head_dim),
+                         (None, 'heads', None), 'fan_in'),
+        'wo': L.dense_schema(H * m.v_head_dim, d, ('qkv_out', 'embed')),
+    }
+    if m.q_lora_rank:
+        sch['wdq'] = L.dense_schema(d, m.q_lora_rank, ('embed', None))
+        sch['q_norm'] = {'scale': ParamSpec((m.q_lora_rank,), (None,), 'ones')}
+        sch['wq'] = L.dense_schema(m.q_lora_rank, H * dq, (None, 'qkv_out'))
+    return sch
+
+
+# ------------------------------------------------- position-independent part
+def compute_latents(params, x_normed: jax.Array, cfg: ModelConfig
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(q_flat pre-RoPE, c_kv post-norm, k_pe pre-RoPE) — the precomputable set."""
+    m = cfg.mla
+    if m.q_lora_rank:
+        cq = L.rmsnorm(L.dense(params['wdq'], x_normed),
+                       params['q_norm']['scale'])
+        q = L.dense(params['wq'], cq)
+    else:
+        q = L.dense(params['wq'], x_normed)
+    ckv_kpe = L.dense(params['wdkv'], x_normed)
+    c_kv = L.rmsnorm(ckv_kpe[..., :m.kv_lora_rank], params['kv_norm']['scale'])
+    k_pe = ckv_kpe[..., m.kv_lora_rank:]
+    return q, c_kv, k_pe
+
+
+def _split_q(q: jax.Array, cfg: ModelConfig):
+    m = cfg.mla
+    *B, _ = q.shape
+    q = q.reshape(*B, cfg.num_heads, m.qk_nope_dim + m.qk_rope_dim)
+    return q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+
+
+# ------------------------------------------------------------------ full seq
+def mla_full(params, x_normed: jax.Array, positions: jax.Array,
+             cfg: ModelConfig, *, rope_theta,
+             latents: Optional[Tuple] = None) -> jax.Array:
+    """Train / prefill MLA (non-absorbed form). ``latents`` = precomputed rows."""
+    m = cfg.mla
+    if latents is None:
+        q, c_kv, k_pe = compute_latents(params, x_normed, cfg)
+    else:
+        q, c_kv, k_pe = latents
+    B, S = q.shape[0], q.shape[1]
+    q_nope, q_pe = _split_q(q, cfg)                       # (B,S,H,dn)/(B,S,H,dr)
+    q_pe = L.apply_rope(q_pe, positions, rope_theta)
+    k_pe = L.apply_rope(k_pe[:, :, None, :], positions, rope_theta)[:, :, 0]
+    k_nope = jnp.einsum('bsr,rhd->bshd', c_kv, params['wuk'].astype(c_kv.dtype))
+    v = jnp.einsum('bsr,rhd->bshd', c_kv, params['wuv'].astype(c_kv.dtype))
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    scores = (jnp.einsum('bqhd,bshd->bhqs', q_nope.astype(jnp.float32),
+                         k_nope.astype(jnp.float32))
+              + jnp.einsum('bqhd,bsd->bhqs', q_pe.astype(jnp.float32),
+                           k_pe.astype(jnp.float32))) * scale
+    i = positions[:, None, :, None]
+    j = positions[:, None, None, :]
+    scores = jnp.where(j <= i, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    ctx = jnp.einsum('bhqs,bshd->bqhd', probs, v)
+    return L.dense(params['wo'], ctx.reshape(B, S, -1))
+
+
+# -------------------------------------------------------------------- decode
+def mla_make_cache(cfg: ModelConfig, batch: int, seq_len: int,
+                   dtype=jnp.bfloat16) -> Dict:
+    m = cfg.mla
+    return {
+        'ckv': jnp.zeros((batch, seq_len, m.kv_lora_rank), dtype),
+        'kpe': jnp.zeros((batch, seq_len, m.qk_rope_dim), dtype),
+        'pos': jnp.full((batch, seq_len), -1, jnp.int32),
+    }
+
+
+def mla_cache_abstract(cfg: ModelConfig, batch: int, seq_len: int, rules,
+                       dtype=jnp.bfloat16) -> Dict:
+    from repro.sharding import logical_sds
+    m = cfg.mla
+    return {
+        'ckv': logical_sds((batch, seq_len, m.kv_lora_rank), dtype,
+                           ('batch', 'cache_seq', None), rules),
+        'kpe': logical_sds((batch, seq_len, m.qk_rope_dim), dtype,
+                           ('batch', 'cache_seq', None), rules),
+        'pos': logical_sds((batch, seq_len), jnp.int32,
+                           ('batch', 'cache_seq'), rules),
+    }
+
+
+def mla_decode_step(params, x_normed: jax.Array, cache: Dict, pos: jax.Array,
+                    cfg: ModelConfig, *, rope_theta,
+                    latents: Optional[Tuple] = None) -> Tuple[jax.Array, Dict]:
+    """Absorbed-form single-token MLA decode."""
+    m = cfg.mla
+    if latents is None:
+        q, c_kv, k_pe = compute_latents(params, x_normed, cfg)
+    else:
+        q, c_kv, k_pe = latents
+    B = q.shape[0]
+    # write this step's latent into the cache (k_pe stored post-RoPE)
+    k_pe_rot = L.apply_rope(k_pe[:, :, None, :], pos[:, None],
+                            rope_theta)[:, :, 0]
+    Sc = cache['ckv'].shape[1]
+    idx = (pos % Sc).astype(jnp.int32)
+    bidx = jnp.arange(B)
+    cache = {
+        'ckv': cache['ckv'].at[bidx, idx].set(
+            c_kv[:, 0].astype(cache['ckv'].dtype)),
+        'kpe': cache['kpe'].at[bidx, idx].set(
+            k_pe_rot[:, 0].astype(cache['kpe'].dtype)),
+        'pos': cache['pos'].at[bidx, idx].set(pos.astype(jnp.int32)),
+    }
+    q_nope, q_pe = _split_q(q[:, 0], cfg)                 # (B,H,dn)/(B,H,dr)
+    q_pe = L.apply_rope(q_pe[:, None], pos[:, None], rope_theta)[:, 0]
+    # absorb W_UK into the query: scores against the latent cache directly
+    q_abs = jnp.einsum('bhd,rhd->bhr', q_nope.astype(jnp.float32),
+                       params['wuk'].astype(jnp.float32))
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    scores = (jnp.einsum('bhr,bsr->bhs', q_abs,
+                         cache['ckv'].astype(jnp.float32))
+              + jnp.einsum('bhd,bsd->bhs', q_pe.astype(jnp.float32),
+                           cache['kpe'].astype(jnp.float32))) * scale
+    cp = cache['pos'][:, None, :]
+    valid = (cp >= 0) & (cp <= pos[:, None, None])
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum('bhs,bsr->bhr', probs.astype(cache['ckv'].dtype),
+                         cache['ckv'])
+    ctx = jnp.einsum('bhr,rhd->bhd', ctx_lat,
+                     params['wuv'].astype(ctx_lat.dtype))
+    return L.dense(params['wo'], ctx.reshape(B, 1, -1)), cache

@@ -1,0 +1,148 @@
+"""Unified model facade over all architecture families.
+
+``Model(cfg)`` dispatches on ``cfg.arch_class`` and exposes one uniform
+surface to the launcher, trainer, server, dry-run, and tests:
+
+    schema() / init(key) / abstract_params(rules)
+    apply(params, batch, ...)          train / prefill forward -> (logits, aux)
+    decode_step(params, batch, states, pos, ...)
+    make_states(...) / states_abstract(...)
+    input_specs(shape, rules)          ShapeDtypeStructs for a dry-run
+    build_table(params) / table_abstract(rules)    the paper's feature
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, InputShape
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models import encdec as E
+from repro.models import vlm as V
+from repro.sharding import Rules, logical_sds
+from repro.core import precompute as PC
+
+VLM_PREFIX = 16          # static text-prefix length before the image span
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    kv_quant: bool = False      # int8 KV cache (decode memory optimisation)
+
+    # ------------------------------------------------------------- params
+    def schema(self) -> Dict:
+        c = self.cfg
+        if c.arch_class == 'audio':
+            return E.encdec_schema(c)
+        if c.arch_class == 'vlm':
+            return V.vlm_schema(c)
+        return T.lm_schema(c)
+
+    def init(self, key: jax.Array, dtype: Optional[str] = None):
+        return L.init_params(self.schema(), key, dtype or self.cfg.dtype)
+
+    def abstract_params(self, rules: Rules):
+        return L.abstract_params(self.schema(), rules, self.cfg.dtype)
+
+    def param_shardings(self, rules: Rules):
+        return L.param_shardings(self.schema(), rules)
+
+    def num_params(self) -> int:
+        return L.count_params(self.schema())
+
+    # ------------------------------------------------------------ forward
+    def apply(self, params, batch: Dict[str, jax.Array], *, rules=None,
+              remat: bool = False, precomputed=None,
+              return_hidden: bool = False):
+        c = self.cfg
+        if c.arch_class == 'audio':
+            return E.encdec_apply(params, batch['tokens'], batch['frames'], c,
+                                  rules=rules, precomputed=precomputed,
+                                  return_hidden=return_hidden)
+        if c.arch_class == 'vlm':
+            return V.vlm_apply(params, batch['tokens'], batch['patches'], c,
+                               n_prefix=VLM_PREFIX, rules=rules, remat=remat,
+                               precomputed=precomputed,
+                               return_hidden=return_hidden)
+        return T.lm_apply(params, batch['tokens'], c, rules=rules,
+                          remat=remat, precomputed=precomputed,
+                          return_hidden=return_hidden)
+
+    def head(self, params, h_normed: jax.Array) -> jax.Array:
+        """Output projection for hidden states from apply(return_hidden=True)."""
+        return T.lm_head(params, h_normed, self.cfg)
+
+    def decode_step(self, params, tokens: jax.Array, states, pos: jax.Array,
+                    *, precomputed=None, rules=None):
+        c = self.cfg
+        if c.arch_class == 'audio':
+            return E.encdec_decode_step(params, tokens, states, pos, c,
+                                        precomputed=precomputed)
+        return T.lm_decode_step(params, tokens, states, pos, c,
+                                precomputed=precomputed, rules=rules)
+
+    # ------------------------------------------------------------- states
+    def make_states(self, batch: int, seq_len: int, dtype=jnp.bfloat16,
+                    kv_quant: bool = False):
+        c = self.cfg
+        if c.arch_class == 'audio':
+            return E.encdec_make_states(c, batch, seq_len, dtype)
+        return T.backbone_make_states(c, batch, seq_len, dtype, kv_quant)
+
+    def states_abstract(self, batch: int, seq_len: int, rules: Rules,
+                        dtype=jnp.bfloat16, kv_quant: bool = False):
+        c = self.cfg
+        if c.arch_class == 'audio':
+            return E.encdec_states_abstract(c, batch, seq_len, rules, dtype)
+        return T.backbone_states_abstract(c, batch, seq_len, rules, dtype,
+                                          kv_quant)
+
+    # ------------------------------------------------- the paper's feature
+    def build_table(self, params) -> PC.PrecomputedTable:
+        return PC.build_precomputed_table(params, self.cfg)
+
+    def table_abstract(self, rules: Rules) -> PC.PrecomputedTable:
+        return PC.table_abstract(self.cfg, rules, jnp.dtype(self.cfg.dtype))
+
+    # --------------------------------------------------------- input specs
+    def input_specs(self, shape: InputShape, rules: Rules) -> Dict[str, Any]:
+        """Dry-run stand-ins for every model input of the given shape."""
+        c = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        tok = lambda *s: logical_sds(s, jnp.int32,
+                                     ('batch',) + (None,) * (len(s) - 1),
+                                     rules)
+        if shape.mode in ('train', 'prefill'):
+            if c.arch_class == 'audio':
+                e = c.encoder
+                specs = {'tokens': tok(B, S),
+                         'frames': logical_sds((B, e.source_len,
+                                                e.frontend_dim),
+                                               jnp.dtype(c.dtype),
+                                               ('batch', None, None), rules)}
+            elif c.arch_class == 'vlm':
+                e = c.encoder
+                s_text = S - e.source_len
+                specs = {'tokens': tok(B, s_text),
+                         'patches': logical_sds((B, e.source_len,
+                                                 e.frontend_dim),
+                                                jnp.dtype(c.dtype),
+                                                ('batch', None, None), rules)}
+            else:
+                specs = {'tokens': tok(B, S)}
+            if shape.mode == 'train':
+                specs['targets'] = tok(B, S) if c.arch_class != 'vlm' \
+                    else tok(B, S)
+            return specs
+        # decode: one new token against a seq_len-deep state
+        return {
+            'tokens': tok(B, 1),
+            'pos': logical_sds((B,), jnp.int32, ('batch',), rules),
+            'states': self.states_abstract(B, S, rules, jnp.dtype(c.dtype),
+                                           kv_quant=self.kv_quant),
+        }

@@ -1,0 +1,127 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Design choice (TPU adaptation): instead of the O(N·E·C) one-hot dispatch
+einsum (which materialises terabytes at train_4k scale), tokens are
+*sorted by expert* and scattered into an (E, C, d) buffer:
+
+    top-k -> repeat tokens k times -> stable-argsort by expert id
+    -> position-within-expert from exclusive-cumsum of expert counts
+    -> scatter (drop overflow > capacity) -> per-expert batched matmuls
+    -> gather back, weight by router prob, sum over k.
+
+Compiled FLOPs therefore scale with ``top_k · capacity_factor``, not with
+``num_experts`` — the honest sparse-MoE cost model. The sort is the TPU
+analogue of the all-to-all shuffle in expert-parallel GPU systems.
+
+Router modes:
+- 'topk_softmax'  (Mixtral): take top-k logits, softmax over them.
+- 'softmax_topk'  (DeepSeek): softmax over all experts, take top-k, renormalise.
+
+Shared experts (DeepSeek) are a dense always-on SwiGLU of width
+``num_shared · d_ff_expert``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, MoEConfig
+from repro.models import layers as L
+from repro.models.ffn import ffn_schema, ffn_apply
+from repro.models.layers import ParamSpec
+
+
+def moe_schema(cfg: ModelConfig) -> Dict:
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_ff_expert, m.num_experts
+    sch = {
+        'router': ParamSpec((d, E), ('embed', 'experts'), 'fan_in',
+                            dtype='float32'),
+        'w_up': ParamSpec((E, d, f), ('experts', 'embed', 'expert_mlp'),
+                          'fan_in'),
+        'w_gate': ParamSpec((E, d, f), ('experts', 'embed', 'expert_mlp'),
+                            'fan_in'),
+        'w_down': ParamSpec((E, f, d), ('experts', 'expert_mlp', 'embed'),
+                            'fan_in'),
+    }
+    if m.num_shared:
+        sch['shared'] = ffn_schema(d, m.num_shared * f, glu=True)
+    return sch
+
+
+def capacity(num_tokens: int, m: MoEConfig) -> int:
+    c = math.ceil(num_tokens * m.top_k * m.capacity_factor / m.num_experts)
+    return max(8, -(-c // 8) * 8)        # round up to a multiple of 8
+
+
+def router_probs(logits: jax.Array, m: MoEConfig, mode: str
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """-> (weights (N,k), expert ids (N,k))."""
+    if mode == 'topk_softmax':
+        top, idx = jax.lax.top_k(logits, m.top_k)
+        return jax.nn.softmax(top, axis=-1), idx
+    p = jax.nn.softmax(logits, axis=-1)
+    top, idx = jax.lax.top_k(p, m.top_k)
+    return top / jnp.sum(top, axis=-1, keepdims=True), idx
+
+
+def moe_apply(params, x: jax.Array, cfg: ModelConfig, *,
+              router_mode: str = 'topk_softmax'
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,d) -> (y, aux_load_balance_loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    N = B * S
+    k, E = m.top_k, m.num_experts
+    xf = x.reshape(N, d)
+
+    logits = jnp.einsum('nd,de->ne', xf.astype(jnp.float32),
+                        params['router'].astype(jnp.float32))
+    w, idx = router_probs(logits, m, router_mode)              # (N,k)
+
+    # ---- load-balance aux loss (Switch-style) ----
+    p_mean = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=0)        # (E,)
+    frac = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(
+        1.0 / (N * k))
+    aux = E * jnp.sum(p_mean * frac)
+
+    # ---- sort-based dispatch ----
+    C = capacity(N, m)
+    ef = idx.reshape(N * k)                                    # expert of each slot
+    wf = w.reshape(N * k).astype(x.dtype)
+    tok = jnp.repeat(jnp.arange(N), k)
+    order = jnp.argsort(ef, stable=True)
+    e_s, t_s, w_s = ef[order], tok[order], wf[order]
+    counts = jnp.zeros((E,), jnp.int32).at[ef].add(1)
+    starts = jnp.cumsum(counts) - counts                       # exclusive cumsum
+    pos = jnp.arange(N * k, dtype=jnp.int32) - starts[e_s]     # pos within expert
+    pos = jnp.where(pos < C, pos, C)                           # overflow -> OOB drop
+
+    buf = jnp.zeros((E, C, d), x.dtype)
+    buf = buf.at[e_s, pos].set(xf[t_s], mode='drop')
+
+    # ---- per-expert SwiGLU ----
+    up = jnp.einsum('ecd,edf->ecf', buf, params['w_up'])
+    gate = jax.nn.silu(jnp.einsum('ecd,edf->ecf', buf, params['w_gate']))
+    y_e = jnp.einsum('ecf,efd->ecd', gate * up, params['w_down'])
+
+    # ---- combine ----
+    pos_safe = jnp.minimum(pos, C - 1)
+    vals = y_e[e_s, pos_safe] * w_s[:, None]
+    vals = jnp.where((pos < C)[:, None], vals, 0)
+    y = jnp.zeros((N, d), x.dtype).at[t_s].add(vals)
+
+    if 'shared' in params:
+        y = y + ffn_apply(params['shared'], xf, act='silu')
+    return y.reshape(B, S, d), aux
+
+
+def moe_num_weights(cfg: ModelConfig) -> int:
+    m = cfg.moe
+    n = 3 * cfg.d_model * m.d_ff_expert * m.num_experts
+    if m.num_shared:
+        n += 3 * cfg.d_model * m.d_ff_expert * m.num_shared
+    return n

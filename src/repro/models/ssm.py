@@ -1,0 +1,455 @@
+"""Recurrent blocks: xLSTM (mLSTM + sLSTM) and Mamba2-style SSM heads (Hymba).
+
+All recurrences are ``lax.scan`` over time for train/prefill (HLO size is
+O(1) in sequence length) and expose a single-``step`` form for decode, whose
+state IS the "cache" — O(1) memory in context length, which is why the SSM and
+hybrid architectures run the long_500k shape.
+
+Paper relevance (beyond-paper generalisation, see DESIGN.md): these blocks
+have *no* positional encoding at all — their input projections are pure
+functions of LN(embedding), so the paper's first-layer precompute applies to:
+
+- mLSTM: the up-projection ``u = W_up·LN(x)`` (the dominant matmul), plus
+  ``v = W_v·u1`` and the i/f gate pre-activations (linear in u1).
+- sLSTM: the z/o gate input contributions (i/f go through the causal conv,
+  which mixes neighbouring positions -> runtime).
+- Mamba head: the in-projection and the gate projection.
+
+What can never be precomputed: causal convolutions and the recurrences
+themselves (they mix positions) — exactly analogous to RoPE+attention staying
+at runtime in the paper's transformer case.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import ParamSpec
+
+
+# ===================================================== chunked time scan
+def _chunk_len(S: int, target: int = 256) -> int:
+    """Largest divisor of S that is <= target (1 if S is prime-ish)."""
+    best = 1
+    for c in range(1, min(target, S) + 1):
+        if S % c == 0:
+            best = c
+    return best
+
+
+def time_scan(body, s0, xs, *, chunk_target: int = 256):
+    """sqrt(T)-checkpointed scan over time.
+
+    Backward through a T-step recurrence needs the state at every step; a
+    plain scan saves all T states (27 GB/layer for hymba train_4k). Chunking
+    saves states only at chunk boundaries and recomputes within a chunk:
+    memory ~ (T/chunk + chunk) states instead of T.
+    """
+    S = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    chunk = _chunk_len(S, chunk_target)
+    n = S // chunk
+    if n <= 1 or chunk == 1:
+        return jax.lax.scan(jax.checkpoint(body), s0, xs)
+
+    xs_c = jax.tree_util.tree_map(
+        lambda t: t.reshape((n, chunk) + t.shape[1:]), xs)
+
+    @jax.checkpoint
+    def outer(s, xc):
+        return jax.lax.scan(body, s, xc)
+
+    s1, ys = jax.lax.scan(outer, s0, xs_c)
+    ys = jax.tree_util.tree_map(
+        lambda t: t.reshape((S,) + t.shape[2:]), ys)
+    return s1, ys
+
+
+# ============================================================== causal conv
+def conv_schema(width: int, kernel: int) -> Dict:
+    return {'w': ParamSpec((kernel, width), ('conv_k', 'embed_act'), 'fan_in'),
+            'b': ParamSpec((width,), ('embed_act',), 'zeros')}
+
+
+def causal_conv(params, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B,S,C), left-padded."""
+    k = params['w'].shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * params['w'][i].astype(x.dtype)
+              for i in range(k))
+    return out + params['b'].astype(x.dtype)
+
+
+def conv_step(params, x_t: jax.Array, buf: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """One decode step. x_t: (B,C); buf: (B,k-1,C) previous inputs."""
+    k = params['w'].shape[0]
+    window = jnp.concatenate([buf, x_t[:, None, :]], axis=1)   # (B,k,C)
+    out = jnp.einsum('bkc,kc->bc', window, params['w'].astype(x_t.dtype))
+    out = out + params['b'].astype(x_t.dtype)
+    return out, window[:, 1:, :]
+
+
+# ==================================================================== mLSTM
+def mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    ed = cfg.ssm.expand * cfg.d_model
+    H = cfg.ssm.num_ssm_heads
+    return ed, H, ed // H
+
+
+def mlstm_schema(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    ed, H, dh = mlstm_dims(cfg)
+    return {
+        'w_up': L.dense_schema(d, 2 * ed, ('embed', 'mlp')),
+        'conv': conv_schema(ed, cfg.ssm.conv_kernel),
+        'wq': L.dense_schema(ed, ed, ('embed_act', 'heads')),
+        'wk': L.dense_schema(ed, ed, ('embed_act', 'heads')),
+        'wv': L.dense_schema(ed, ed, ('embed_act', 'heads')),
+        'w_if': L.dense_schema(ed, 2 * H, ('embed_act', None)),
+        'out_norm': {'scale': ParamSpec((ed,), ('embed_act',), 'ones')},
+        'w_down': L.dense_schema(ed, d, ('mlp', 'embed')),
+    }
+
+
+def mlstm_preproj(params, xn: jax.Array) -> Dict[str, jax.Array]:
+    """Position-independent projections (the precomputable set)."""
+    u = L.dense(params['w_up'], xn)
+    ed = u.shape[-1] // 2
+    u1, u2 = u[..., :ed], u[..., ed:]
+    return {'u1': u1, 'u2': u2, 'v': L.dense(params['wv'], u1),
+            'ifg': L.dense(params['w_if'], u1)}
+
+
+def _mlstm_recurrence(q, k, v, i_pre, f_pre, state):
+    """One timestep. q,k,v: (B,H,dh); i/f_pre: (B,H); state=(C,n,m)."""
+    C, n, m = state
+    f_log = jax.nn.log_sigmoid(f_pre)                       # stabilised forget
+    m_new = jnp.maximum(f_log + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(f_log + m - m_new)
+    C = f_g[..., None, None] * C + i_g[..., None, None] * (
+        k[..., :, None] * v[..., None, :])                  # (B,H,dk,dv)
+    n = f_g[..., None] * n + i_g[..., None] * k
+    num = jnp.einsum('bhkv,bhk->bhv', C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum('bhk,bhk->bh', n, q)), 1.0)
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int) -> Dict:
+    ed, H, dh = mlstm_dims(cfg)
+    return {
+        'C': jnp.zeros((batch, H, dh, dh), jnp.float32),
+        'n': jnp.zeros((batch, H, dh), jnp.float32),
+        'm': jnp.zeros((batch, H), jnp.float32),
+        'conv': jnp.zeros((batch, cfg.ssm.conv_kernel - 1, ed), jnp.float32),
+    }
+
+
+def _mlstm_core(params, pre: Dict, state: Dict, cfg: ModelConfig,
+                single_step: bool) -> Tuple[jax.Array, Dict]:
+    ed, H, dh = mlstm_dims(cfg)
+    dtype = pre['u1'].dtype
+    B, S = pre['u1'].shape[:2]
+
+    def shape_h(t):                                          # (B,S,ed)->(B,S,H,dh)
+        return t.reshape(B, S, H, dh).astype(jnp.float32)
+
+    if single_step:
+        c_t, conv_buf = conv_step(params['conv'], pre['u1'][:, 0],
+                                  state['conv'].astype(dtype))
+        c_t = jax.nn.silu(c_t)[:, None]
+    else:
+        c_t = jax.nn.silu(causal_conv(params['conv'], pre['u1']))
+        conv_buf = None
+    q = shape_h(L.dense(params['wq'], c_t))
+    k = shape_h(L.dense(params['wk'], c_t)) * dh ** -0.5
+    v = shape_h(pre['v'])
+    ifg = pre['ifg'].astype(jnp.float32).reshape(B, S, 2, H)
+    i_pre, f_pre = ifg[:, :, 0], ifg[:, :, 1]
+
+    s0 = (state['C'], state['n'], state['m'])
+    if single_step:
+        s1, h = _mlstm_recurrence(q[:, 0], k[:, 0], v[:, 0],
+                                  i_pre[:, 0], f_pre[:, 0], s0)
+        h = h[:, None]
+    else:
+        def body(s, xs):
+            return _mlstm_recurrence(*xs, s)
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, i_pre, f_pre))
+        s1, h = time_scan(body, s0, xs)
+        h = jnp.moveaxis(h, 0, 1)                            # (B,S,H,dh)
+    h = h.reshape(B, S, ed).astype(dtype)
+    h = L.rmsnorm(h.reshape(B, S, H, dh),
+                  params['out_norm']['scale'].reshape(H, dh)).reshape(B, S, ed)
+    out = h * jax.nn.silu(pre['u2'])
+    y = L.dense(params['w_down'], out)
+    new_state = {'C': s1[0], 'n': s1[1], 'm': s1[2],
+                 'conv': conv_buf.astype(jnp.float32) if conv_buf is not None
+                 else state['conv']}
+    return y, new_state
+
+
+def mlstm_apply(params, xn: jax.Array, cfg: ModelConfig, *,
+                pre: Optional[Dict] = None) -> jax.Array:
+    """Full-sequence mLSTM on pre-normed input. pre = precomputed projections."""
+    if pre is None:
+        pre = mlstm_preproj(params, xn)
+    state = mlstm_init_state(cfg, xn.shape[0] if xn is not None
+                             else pre['u1'].shape[0])
+    y, _ = _mlstm_core(params, pre, state, cfg, single_step=False)
+    return y
+
+
+def mlstm_step(params, xn: jax.Array, state: Dict, cfg: ModelConfig, *,
+               pre: Optional[Dict] = None) -> Tuple[jax.Array, Dict]:
+    if pre is None:
+        pre = mlstm_preproj(params, xn)
+    return _mlstm_core(params, pre, state, cfg, single_step=True)
+
+
+# ==================================================================== sLSTM
+def slstm_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    H = cfg.ssm.num_ssm_heads
+    return H, cfg.d_model // H
+
+
+def slstm_schema(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    H, dh = slstm_dims(cfg)
+    pf = int(cfg.ssm.proj_factor_slstm * d)
+    return {
+        'conv': conv_schema(d, cfg.ssm.conv_kernel),
+        'w_z': L.dense_schema(d, d, ('embed', 'heads')),
+        'w_o': L.dense_schema(d, d, ('embed', 'heads')),
+        'w_i': L.dense_schema(d, d, ('embed', 'heads')),
+        'w_f': L.dense_schema(d, d, ('embed', 'heads')),
+        'r_z': ParamSpec((H, dh, dh), ('heads', None, None), 'fan_in'),
+        'r_o': ParamSpec((H, dh, dh), ('heads', None, None), 'fan_in'),
+        'r_i': ParamSpec((H, dh, dh), ('heads', None, None), 'fan_in'),
+        'r_f': ParamSpec((H, dh, dh), ('heads', None, None), 'fan_in'),
+        'out_norm': {'scale': ParamSpec((d,), ('embed_act',), 'ones')},
+        'ffn_up': L.dense_schema(d, 2 * pf, ('embed', 'mlp')),
+        'ffn_down': L.dense_schema(pf, d, ('mlp', 'embed')),
+    }
+
+
+def slstm_preproj(params, xn: jax.Array) -> Dict[str, jax.Array]:
+    """z/o input contributions are precomputable; i/f need the conv output."""
+    return {'z_in': L.dense(params['w_z'], xn),
+            'o_in': L.dense(params['w_o'], xn), 'xn': xn}
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> Dict:
+    H, dh = slstm_dims(cfg)
+    return {
+        'h': jnp.zeros((batch, H, dh), jnp.float32),
+        'c': jnp.zeros((batch, H, dh), jnp.float32),
+        'n': jnp.ones((batch, H, dh), jnp.float32),
+        'm': jnp.zeros((batch, H, dh), jnp.float32),
+        'conv': jnp.zeros((batch, cfg.ssm.conv_kernel - 1, cfg.d_model),
+                          jnp.float32),
+    }
+
+
+def _slstm_recurrence(params, z_in, o_in, i_in, f_in, state):
+    """(B,H,dh) gate pre-activations + recurrent contributions."""
+    h, c, n, m = state
+
+    def rec(r, hh):
+        return jnp.einsum('hij,bhj->bhi', r.astype(jnp.float32), hh)
+
+    z = jnp.tanh(z_in + rec(params['r_z'], h))
+    o = jax.nn.sigmoid(o_in + rec(params['r_o'], h))
+    i_raw = i_in + rec(params['r_i'], h)
+    f_raw = f_in + rec(params['r_f'], h)
+    f_log = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(f_log + m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(f_log + m - m_new)
+    c_new = f_g * c + i_g * z
+    n_new = f_g * n + i_g
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new, c_new, n_new, m_new), h_new
+
+
+def _slstm_core(params, pre: Dict, state: Dict, cfg: ModelConfig,
+                single_step: bool) -> Tuple[jax.Array, Dict]:
+    H, dh = slstm_dims(cfg)
+    d = cfg.d_model
+    xn = pre['xn']
+    dtype = xn.dtype
+    B, S = xn.shape[:2]
+    if single_step:
+        c_t, conv_buf = conv_step(params['conv'], xn[:, 0],
+                                  state['conv'].astype(dtype))
+        c_t = jax.nn.silu(c_t)[:, None]
+    else:
+        c_t = jax.nn.silu(causal_conv(params['conv'], xn))
+        conv_buf = None
+
+    def gshape(t):
+        return t.reshape(B, S, H, dh).astype(jnp.float32)
+
+    z_in, o_in = gshape(pre['z_in']), gshape(pre['o_in'])
+    i_in = gshape(L.dense(params['w_i'], c_t))
+    f_in = gshape(L.dense(params['w_f'], c_t))
+
+    s0 = (state['h'], state['c'], state['n'], state['m'])
+    if single_step:
+        s1, h = _slstm_recurrence(params, z_in[:, 0], o_in[:, 0], i_in[:, 0],
+                                  f_in[:, 0], s0)
+        h = h[:, None]
+    else:
+        def body(s, xs):
+            return _slstm_recurrence(params, *xs, s)
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (z_in, o_in, i_in, f_in))
+        s1, h = time_scan(body, s0, xs)
+        h = jnp.moveaxis(h, 0, 1)
+    h = h.reshape(B, S, d).astype(dtype)
+    h = L.rmsnorm(h, params['out_norm']['scale'])
+    up = L.dense(params['ffn_up'], h)
+    pf = up.shape[-1] // 2
+    y = L.dense(params['ffn_down'], jax.nn.gelu(up[..., :pf]) * up[..., pf:])
+    new_state = {'h': s1[0], 'c': s1[1], 'n': s1[2], 'm': s1[3],
+                 'conv': conv_buf.astype(jnp.float32) if conv_buf is not None
+                 else state['conv']}
+    return y, new_state
+
+
+def slstm_apply(params, xn: jax.Array, cfg: ModelConfig, *,
+                pre: Optional[Dict] = None) -> jax.Array:
+    if pre is None:
+        pre = slstm_preproj(params, xn)
+    state = slstm_init_state(cfg, pre['xn'].shape[0])
+    y, _ = _slstm_core(params, pre, state, cfg, single_step=False)
+    return y
+
+
+def slstm_step(params, xn: jax.Array, state: Dict, cfg: ModelConfig, *,
+               pre: Optional[Dict] = None) -> Tuple[jax.Array, Dict]:
+    if pre is None:
+        pre = slstm_preproj(params, xn)
+    return _slstm_core(params, pre, state, cfg, single_step=True)
+
+
+# ============================================== Mamba2-style head (Hymba)
+def mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """Hymba keeps the SSM branch width equal to the attention branch width."""
+    ed = cfg.num_heads * cfg.head_dim
+    H = cfg.ssm.num_ssm_heads
+    return ed, H, ed // H
+
+
+def mamba_schema(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    ed, H, dh = mamba_dims(cfg)
+    N = cfg.ssm.state_dim
+    return {
+        'w_in': L.dense_schema(d, ed, ('embed', 'heads')),
+        'w_gate': L.dense_schema(d, ed, ('embed', 'heads')),
+        'conv': conv_schema(ed, cfg.ssm.conv_kernel),
+        'w_bcdt': L.dense_schema(ed, 2 * N + H, ('embed_act', None)),
+        'a_log': ParamSpec((H,), (None,), 'zeros'),
+        'dt_bias': ParamSpec((H,), (None,), 'zeros'),
+        'd_skip': ParamSpec((H,), (None,), 'ones'),
+    }
+
+
+def mamba_preproj(params, xn: jax.Array) -> Dict[str, jax.Array]:
+    return {'x_in': L.dense(params['w_in'], xn),
+            'gate': L.dense(params['w_gate'], xn)}
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int) -> Dict:
+    ed, H, dh = mamba_dims(cfg)
+    return {
+        'S': jnp.zeros((batch, ed, cfg.ssm.state_dim), jnp.float32),
+        'conv': jnp.zeros((batch, cfg.ssm.conv_kernel - 1, ed), jnp.float32),
+    }
+
+
+def _mamba_recurrence(x_c, B_, C_, dt_c, decay_c, d_skip_c, S):
+    """CHANNEL-FLAT selective-scan step (see §Perf hillclimb-2, iter 4).
+
+    x_c:(B,C) B_,C_:(B,N) dt_c,decay_c:(B,C) d_skip_c:(C,) -> (S', y).
+    Identical math to the per-head form (dt/decay/D broadcast head->channel),
+    but the state (B,C,N) keeps the ed dim FLAT — it shards over 'model'
+    even when the head count (25) doesn't divide the mesh axis, so the
+    recurrence never forces the (B,S,ed) replication gathers that made
+    hymba prefill collective-bound.
+    """
+    S = decay_c[..., None] * S + (dt_c * x_c)[..., None] \
+        * B_[:, None, :]                                     # (B,C,N)
+    y = jnp.einsum('bcn,bn->bc', S, C_) + d_skip_c[None, :] * x_c
+    return S, y
+
+
+def _mamba_core(params, pre: Dict, state: Dict, cfg: ModelConfig,
+                single_step: bool, rules=None) -> Tuple[jax.Array, Dict]:
+    ed, H, dh = mamba_dims(cfg)
+    N = cfg.ssm.state_dim
+    dtype = pre['x_in'].dtype
+    B, S_len = pre['x_in'].shape[:2]
+    if single_step:
+        xc, conv_buf = conv_step(params['conv'], pre['x_in'][:, 0],
+                                 state['conv'].astype(dtype))
+        xc = jax.nn.silu(xc)[:, None]
+    else:
+        xc = jax.nn.silu(causal_conv(params['conv'], pre['x_in']))
+        conv_buf = None
+    bcdt = L.dense(params['w_bcdt'], xc).astype(jnp.float32)
+    B_, C_, dt = (bcdt[..., :N], bcdt[..., N:2 * N], bcdt[..., 2 * N:])
+    dt = jax.nn.softplus(dt + params['dt_bias'].astype(jnp.float32))
+    a = -jnp.exp(params['a_log'].astype(jnp.float32))        # (H,) negative
+    decay = jnp.exp(a * dt)                                  # (B,S,H)
+    # the recurrence operates on the FLAT ed dim (shardable regardless of
+    # head count); per-head dt/decay stay (B,S,H) in the scan inputs and are
+    # broadcast head->channel PER STEP inside the body — materialising the
+    # (B,S,ed) f32 broadcasts as scan inputs was a 1.5x train-memory
+    # regression (§Perf hillclimb-2, iter 4a refuted -> 4b)
+    d_skip_c = jnp.repeat(params['d_skip'].astype(jnp.float32), dh)
+
+    def step(s, x_t, b_t, c_t, dt_t, decay_t):
+        return _mamba_recurrence(
+            x_t.astype(jnp.float32), b_t, c_t,
+            jnp.repeat(dt_t, dh, axis=-1), jnp.repeat(decay_t, dh, axis=-1),
+            d_skip_c, s)
+
+    if single_step:
+        S1, y = step(state['S'], xc[:, 0], B_[:, 0], C_[:, 0], dt[:, 0],
+                     decay[:, 0])
+        y = y[:, None]
+    else:
+        def body(s, xs):
+            return step(s, *xs)
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xc, B_, C_, dt, decay))
+        S1, y = time_scan(body, state['S'], xs)
+        y = jnp.moveaxis(y, 0, 1)
+    y = y.reshape(B, S_len, ed).astype(dtype)
+    y = y * jax.nn.silu(pre['gate'])
+    new_state = {'S': S1,
+                 'conv': conv_buf.astype(jnp.float32) if conv_buf is not None
+                 else state['conv']}
+    return y, new_state
+
+
+def mamba_apply(params, xn: jax.Array, cfg: ModelConfig, *,
+                pre: Optional[Dict] = None, rules=None) -> jax.Array:
+    if pre is None:
+        pre = mamba_preproj(params, xn)
+    state = mamba_init_state(cfg, pre['x_in'].shape[0])
+    y, _ = _mamba_core(params, pre, state, cfg, single_step=False,
+                       rules=rules)
+    return y
+
+
+def mamba_step(params, xn: jax.Array, state: Dict, cfg: ModelConfig, *,
+               pre: Optional[Dict] = None) -> Tuple[jax.Array, Dict]:
+    if pre is None:
+        pre = mamba_preproj(params, xn)
+    return _mamba_core(params, pre, state, cfg, single_step=True)

@@ -1,0 +1,389 @@
+"""Decoder-only LM assembly.
+
+Layer organisation (see DESIGN.md §5):
+
+- **layer 0 is always unstacked** — this is what makes the paper's first-layer
+  precompute a clean surgery: with a precomputed table, layer 0 consumes
+  gathered ``[x|s, q, k, v, ...]`` rows instead of running its projections,
+  and nothing inside the scanned stack changes.
+- optional unstacked *head* layers (e.g. DeepSeek's leading dense-FFN layers),
+- a ``lax.scan`` over repetitions of the arch's layer *pattern* (params stacked
+  per pattern slot -> HLO size independent of depth; each slot keeps static
+  structure such as sliding-window cache length),
+- an unrolled *tail* for non-divisible depths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models.blocks import (block_apply_full, block_decode,
+                                 block_make_state, block_schema,
+                                 block_state_abstract, preproj_layout)
+from repro.models.layers import ParamSpec
+
+
+# ========================================================== layer organisation
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    kinds: Tuple[str, ...]          # kind of every layer, in order
+    use_moe: Tuple[bool, ...]       # per layer
+    n_head: int                     # unstacked layers after layer 0
+    reps: int                       # scan repetitions
+    slots: Tuple[str, ...]          # rotated pattern (kind per scan slot)
+    n_tail: int
+
+
+def layer_plan(cfg: ModelConfig) -> LayerPlan:
+    P = len(cfg.pattern)
+    kinds = tuple(cfg.pattern[i % P] for i in range(cfg.num_layers))
+    n_dense = cfg.moe.first_dense_layers if cfg.moe else 0
+    use_moe = tuple(cfg.moe is not None and i >= n_dense
+                    for i in range(cfg.num_layers))
+    n_head = max(0, n_dense - 1)            # layer 0 is peeled separately
+    start = 1 + n_head
+    remaining = cfg.num_layers - start
+    slots = tuple(cfg.pattern[(start + s) % P] for s in range(P))
+    reps = remaining // P
+    n_tail = remaining - reps * P
+    return LayerPlan(kinds, use_moe, n_head, reps, slots, n_tail)
+
+
+def _slot_shardings(cfg: ModelConfig, plan: LayerPlan, body_moe: bool, rules):
+    """Per-slot NamedShardings for the UNSTACKED layer params.
+
+    Applied as with_sharding_constraint on the scan body's sliced params:
+    this pins each layer's weights to their (FSDP-)sharded layout INSIDE the
+    loop, so the SPMD partitioner cannot hoist the all-gather of the whole
+    stacked parameter tree out of the scan (which would materialise every
+    layer's gathered weights at once — 780 GiB/device for llama3-405b).
+    """
+    if rules is None or rules.mesh is None:
+        return [None] * len(plan.slots)
+    return [L.param_shardings(block_schema(cfg, k, body_moe), rules)
+            for k in plan.slots]
+
+
+def _constrain_params(prm, shardings):
+    if shardings is None:
+        return prm
+    return jax.tree_util.tree_map(
+        lambda x, sh: jax.lax.with_sharding_constraint(x, sh)
+        if sh is not None else x, prm, shardings)
+
+
+# ==================================================================== schema
+def backbone_schema(cfg: ModelConfig) -> Dict:
+    plan = layer_plan(cfg)
+    sch: Dict[str, Any] = {
+        'layer0': block_schema(cfg, plan.kinds[0], plan.use_moe[0])}
+    if plan.n_head:
+        sch['head'] = [block_schema(cfg, plan.kinds[1 + i], plan.use_moe[1 + i])
+                       for i in range(plan.n_head)]
+    if plan.reps:
+        body_moe = plan.use_moe[1 + plan.n_head]
+        sch['body'] = [L.stack_schema(block_schema(cfg, k, body_moe),
+                                      plan.reps) for k in plan.slots]
+    if plan.n_tail:
+        sch['tail'] = [block_schema(cfg, plan.slots[i], plan.use_moe[-1])
+                       for i in range(plan.n_tail)]
+    return sch
+
+
+def lm_schema(cfg: ModelConfig) -> Dict:
+    sch: Dict[str, Any] = {
+        'embed': L.embed_schema(cfg.vocab_size, cfg.d_model),
+        'final_norm': L.norm_schema(cfg.d_model, cfg.norm),
+        'backbone': backbone_schema(cfg),
+    }
+    if not cfg.tie_embeddings:
+        sch['lm_head'] = L.dense_schema(cfg.d_model, cfg.vocab_size,
+                                        ('embed', 'vocab'))
+    if cfg.pos == 'learned':
+        sch['pos_embed'] = ParamSpec((cfg.max_seq_len, cfg.d_model),
+                                     (None, 'embed'), 'normal', 0.02)
+    if cfg.num_meta_tokens:
+        sch['meta'] = ParamSpec((cfg.num_meta_tokens, cfg.d_model),
+                                (None, 'embed'), 'normal', 0.02)
+    return sch
+
+
+# ================================================================= embedding
+def embed_tokens(params, tokens: jax.Array, cfg: ModelConfig,
+                 positions: Optional[jax.Array] = None) -> jax.Array:
+    h = L.embed_lookup(params['embed'], tokens).astype(jnp.dtype(cfg.dtype))
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    if cfg.pos == 'learned':
+        assert positions is not None
+        h = h + jnp.take(params['pos_embed'], positions, axis=0).astype(h.dtype)
+    return h
+
+
+def lm_head(params, h_normed: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Output projection only (callers may chunk over sequence)."""
+    if cfg.tie_embeddings:
+        logits = L.unembed(params['embed'], h_normed)
+    else:
+        logits = L.dense(params['lm_head'], h_normed)
+    return L.softcap(logits, cfg.logit_softcap)
+
+
+def lm_logits(params, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return lm_head(params, L.norm_apply(params['final_norm'], h, cfg.norm),
+                   cfg)
+
+
+# ================================================================== full seq
+def backbone_apply(params, h: jax.Array, positions: jax.Array,
+                   cfg: ModelConfig, *, rules=None, remat: bool = False,
+                   pre0: Optional[Dict] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Run all layers on initial hidden states. pre0 = layer-0 precompute rows."""
+    plan = layer_plan(cfg)
+
+    def constrain(x):
+        return rules.constrain(x, ('batch', 'seq', 'embed_act')) \
+            if rules is not None else x
+
+    def run_block(prm, hh, kind, moe, pre=None):
+        f = lambda p, x: block_apply_full(p, x, positions, cfg, kind, moe,
+                                          pre=pre, rules=rules)
+        if remat:   # unstacked layers need remat too (15-layer hymba tail!)
+            f = jax.checkpoint(f)
+        return f(prm, hh)
+
+    aux = jnp.zeros((), jnp.float32)
+    h, a = run_block(params['layer0'], h, plan.kinds[0], plan.use_moe[0],
+                     pre=pre0)
+    h = constrain(h)
+    aux += a
+    for i in range(plan.n_head):
+        h, a = run_block(params['head'][i], h, plan.kinds[1 + i],
+                         plan.use_moe[1 + i])
+        h = constrain(h)
+        aux += a
+    if plan.reps:
+        body_moe = plan.use_moe[1 + plan.n_head]
+        slot_shardings = _slot_shardings(cfg, plan, body_moe, rules)
+
+        def one_block(kind):
+            def f(prm, hh):
+                return block_apply_full(prm, hh, positions, cfg, kind,
+                                        body_moe, rules=rules)
+            # nested remat: the scan-level checkpoint saves only the carry
+            # per rep; the per-layer checkpoint bounds the backward's
+            # recompute working set to ONE layer's intermediates
+            return jax.checkpoint(f) if remat else f
+
+        blocks = [one_block(k) for k in plan.slots]
+
+        def body(carry, xs):
+            hh, ax = carry
+            for s in range(len(plan.slots)):
+                prm = _constrain_params(xs[s], slot_shardings[s])
+                hh, a_s = blocks[s](prm, hh)
+                hh = constrain(hh)
+                ax += a_s
+            return (hh, ax), None
+
+        if remat:
+            body = jax.checkpoint(body)
+        (h, aux), _ = jax.lax.scan(body, (h, aux), tuple(params['body']))
+    for i in range(plan.n_tail):
+        h, a = run_block(params['tail'][i], h, plan.slots[i],
+                         plan.use_moe[-1])
+        h = constrain(h)
+        aux += a
+    return h, aux
+
+
+def lm_apply(params, tokens: jax.Array, cfg: ModelConfig, *,
+             positions: Optional[jax.Array] = None, rules=None,
+             remat: bool = False, precomputed=None,
+             return_hidden: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B,S) -> (logits (B,S,V), aux_loss).
+
+    ``precomputed``: a repro.core.PrecomputedTable — the paper's feature. When
+    given, the embedding lookup AND all of layer 0's position-independent
+    computation are replaced by a single gather of the expanded table.
+    """
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+    if precomputed is not None:
+        pre0 = precomputed.gather(tokens)
+        h = pre0['s'] if 's' in pre0 else pre0['x']
+    else:
+        pre0 = None
+        h = embed_tokens(params, tokens, cfg, positions)
+    if cfg.num_meta_tokens:
+        meta = jnp.broadcast_to(
+            params['meta'].astype(h.dtype)[None],
+            (B, cfg.num_meta_tokens, cfg.d_model))
+        h = jnp.concatenate([meta, h], axis=1)
+        mpos = jnp.broadcast_to(
+            jnp.arange(cfg.num_meta_tokens, dtype=jnp.int32)[None],
+            (B, cfg.num_meta_tokens))
+        positions = jnp.concatenate([mpos, positions + cfg.num_meta_tokens],
+                                    axis=1)
+        if pre0 is not None:   # meta tokens are not vocabulary entries:
+            # compute their layer-0 projections on the fly and prepend
+            from repro.models.blocks import block_preproj
+            plan = layer_plan(cfg)
+            mpre = block_preproj(params['backbone']['layer0'], h[:, :cfg.num_meta_tokens],
+                                 cfg, plan.kinds[0], plan.use_moe[0])
+            pre0 = {k: jnp.concatenate([mpre[k], pre0[k]], axis=1)
+                    for k in pre0}
+            h = pre0['s'] if 's' in pre0 else pre0['x']
+    h, aux = backbone_apply(params['backbone'], h, positions, cfg,
+                            rules=rules, remat=remat, pre0=pre0)
+    h = L.norm_apply(params['final_norm'], h, cfg.norm)
+    if cfg.num_meta_tokens:
+        h = h[:, cfg.num_meta_tokens:]
+    if return_hidden:
+        return h, aux
+    return lm_head(params, h, cfg), aux
+
+
+# ==================================================================== decode
+def backbone_make_states(cfg: ModelConfig, batch: int, seq_len: int,
+                         dtype=jnp.bfloat16, quant: bool = False) -> Dict:
+    plan = layer_plan(cfg)
+    st: Dict[str, Any] = {
+        'layer0': block_make_state(cfg, plan.kinds[0], batch, seq_len, dtype,
+                                   quant)}
+    if plan.n_head:
+        st['head'] = [block_make_state(cfg, plan.kinds[1 + i], batch, seq_len,
+                                       dtype, quant)
+                      for i in range(plan.n_head)]
+    if plan.reps:
+        st['body'] = [
+            jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (plan.reps,) + x.shape)
+                .copy() if hasattr(x, 'shape') else x,
+                block_make_state(cfg, k, batch, seq_len, dtype, quant))
+            for k in plan.slots]
+    if plan.n_tail:
+        st['tail'] = [block_make_state(cfg, plan.slots[i], batch, seq_len,
+                                       dtype, quant)
+                      for i in range(plan.n_tail)]
+    return st
+
+
+def backbone_states_abstract(cfg: ModelConfig, batch: int, seq_len: int,
+                             rules, dtype=jnp.bfloat16,
+                             quant: bool = False) -> Dict:
+    plan = layer_plan(cfg)
+
+    def stack_sds(sds_tree, n):
+        return jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(
+                (n,) + s.shape, s.dtype,
+                sharding=_prepend_none(s.sharding)), sds_tree)
+
+    def _prepend_none(sh):
+        if sh is None:
+            return None
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return NamedSharding(sh.mesh, P(*((None,) + tuple(sh.spec))))
+
+    st: Dict[str, Any] = {
+        'layer0': block_state_abstract(cfg, plan.kinds[0], batch, seq_len,
+                                       rules, dtype, quant)}
+    if plan.n_head:
+        st['head'] = [block_state_abstract(cfg, plan.kinds[1 + i], batch,
+                                           seq_len, rules, dtype, quant)
+                      for i in range(plan.n_head)]
+    if plan.reps:
+        st['body'] = [stack_sds(block_state_abstract(cfg, k, batch, seq_len,
+                                                     rules, dtype, quant),
+                                plan.reps)
+                      for k in plan.slots]
+    if plan.n_tail:
+        st['tail'] = [block_state_abstract(cfg, plan.slots[i], batch, seq_len,
+                                           rules, dtype, quant)
+                      for i in range(plan.n_tail)]
+    return st
+
+
+def backbone_decode(params, h: jax.Array, states: Dict, pos: jax.Array,
+                    cfg: ModelConfig, *, pre0: Optional[Dict] = None,
+                    rules=None) -> Tuple[jax.Array, Dict]:
+    plan = layer_plan(cfg)
+    new_states: Dict[str, Any] = {}
+    h, st = block_decode(params['layer0'], h, states['layer0'], pos, cfg,
+                         plan.kinds[0], plan.use_moe[0], pre=pre0)
+    new_states['layer0'] = st
+    if plan.n_head:
+        new_states['head'] = []
+        for i in range(plan.n_head):
+            h, st = block_decode(params['head'][i], h, states['head'][i], pos,
+                                 cfg, plan.kinds[1 + i], plan.use_moe[1 + i])
+            new_states['head'].append(st)
+    if plan.reps:
+        body_moe = plan.use_moe[1 + plan.n_head]
+        slot_shardings = _slot_shardings(cfg, plan, body_moe, rules)
+
+        def body(hh, xs):
+            prm, sts = xs
+            outs = []
+            for s, kind in enumerate(plan.slots):
+                prm_s = _constrain_params(prm[s], slot_shardings[s])
+                hh, st_s = block_decode(prm_s, hh, sts[s], pos, cfg, kind,
+                                        body_moe)
+                outs.append(st_s)
+            return hh, tuple(outs)
+
+        h, body_states = jax.lax.scan(
+            body, h, (tuple(params['body']), tuple(states['body'])))
+        new_states['body'] = list(body_states)
+    if plan.n_tail:
+        new_states['tail'] = []
+        for i in range(plan.n_tail):
+            h, st = block_decode(params['tail'][i], h, states['tail'][i], pos,
+                                 cfg, plan.slots[i], plan.use_moe[-1])
+            new_states['tail'].append(st)
+    return h, new_states
+
+
+def prime_meta_states(params, states: Dict, cfg: ModelConfig,
+                      batch: int) -> Dict:
+    """Feed the learnable meta tokens (Hymba) through the decode path so the
+    caches/recurrent states start as if the meta prefix had been prefilled.
+    Token positions must then start at ``cfg.num_meta_tokens``.
+    """
+    for i in range(cfg.num_meta_tokens):
+        h = jnp.broadcast_to(
+            params['meta'][i].astype(jnp.dtype(cfg.dtype))[None, None],
+            (batch, 1, cfg.d_model))
+        _, states = backbone_decode(params['backbone'], h, states,
+                                    jnp.full((batch,), i, jnp.int32), cfg)
+    return states
+
+
+def lm_decode_step(params, tokens: jax.Array, states: Dict, pos: jax.Array,
+                   cfg: ModelConfig, *, precomputed=None, rules=None
+                   ) -> Tuple[jax.Array, Dict]:
+    """tokens (B,1), pos (B,) -> (logits (B,1,V), new states).
+
+    With ``precomputed``, the embedding read + layer-0 projections collapse to
+    one row gather — the paper's decode-time win.
+    """
+    if precomputed is not None:
+        pre0 = precomputed.gather(tokens)
+        h = pre0['s'] if 's' in pre0 else pre0['x']
+    else:
+        pre0 = None
+        h = embed_tokens(params, tokens, cfg,
+                         positions=pos[:, None] if cfg.pos == 'learned'
+                         else None)
+    h, states = backbone_decode(params['backbone'], h, states, pos, cfg,
+                                pre0=pre0, rules=rules)
+    return lm_logits(params, h, cfg), states

@@ -1,0 +1,91 @@
+"""InternVL-style VLM: vision stub -> MLP projector -> language model.
+
+The ViT (InternViT) is a STUB per the assignment: ``input_specs`` provides
+precomputed patch features (B, n_patches, frontend_dim). The 2-layer MLP
+projector and the language backbone (InternLM2-style dense GQA transformer)
+are real.
+
+Sequence layout: ``[text_prefix | image patches | text_suffix]``. The split
+point ``n_prefix`` is static per config.
+
+Paper relevance — the *hybrid* precompute mode: image-patch embeddings are
+continuous (not enumerable), so only the discrete text positions can use the
+precomputed table. ``vlm_apply(..., precomputed=...)`` gathers rows for text
+tokens and runs layer-0's projections on the fly for the vision span only
+(``core.hybrid_vlm_pre0``), recovering the paper's savings ∝ text fraction.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models.transformer import (backbone_apply, backbone_decode,
+                                      backbone_make_states,
+                                      backbone_states_abstract, embed_tokens,
+                                      lm_decode_step, lm_logits, lm_schema)
+
+
+def vlm_schema(cfg: ModelConfig) -> Dict:
+    e = cfg.encoder
+    sch = lm_schema(cfg)
+    sch['projector'] = {
+        'ln': L.norm_schema(e.frontend_dim, cfg.norm),
+        'fc1': L.dense_schema(e.frontend_dim, cfg.d_model, (None, 'embed'),
+                              bias=True),
+        'fc2': L.dense_schema(cfg.d_model, cfg.d_model, ('embed', 'embed'),
+                              bias=True),
+    }
+    return sch
+
+
+def project_patches(params, patches: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """(B, P, frontend_dim) stub ViT features -> (B, P, d_model)."""
+    h = L.norm_apply(params['projector']['ln'],
+                     patches.astype(jnp.dtype(cfg.dtype)), cfg.norm)
+    h = jax.nn.gelu(L.dense(params['projector']['fc1'], h))
+    return L.dense(params['projector']['fc2'], h)
+
+
+def vlm_apply(params, tokens: jax.Array, patches: jax.Array,
+              cfg: ModelConfig, *, n_prefix: int = 0, rules=None,
+              remat: bool = False, precomputed=None,
+              return_hidden: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B,S_text), patches (B,P,fd) -> (logits over FULL seq, aux).
+
+    Vision tokens sit at [n_prefix, n_prefix+P); logits for those positions
+    are produced but ignored by the loss (callers mask them).
+    """
+    B, S_text = tokens.shape
+    P = patches.shape[1]
+    S = S_text + P
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    vis_h = project_patches(params, patches, cfg)
+    if precomputed is not None:
+        from repro.core.precompute import hybrid_vlm_pre0
+        pre0 = hybrid_vlm_pre0(params, cfg, precomputed, tokens, vis_h,
+                               n_prefix)
+        h = pre0['x']
+    else:
+        pre0 = None
+        txt = embed_tokens(params, tokens, cfg, positions[:, :S_text])
+        h = jnp.concatenate(
+            [txt[:, :n_prefix], vis_h.astype(txt.dtype), txt[:, n_prefix:]],
+            axis=1)
+    h, aux = backbone_apply(params['backbone'], h, positions, cfg,
+                            rules=rules, remat=remat, pre0=pre0)
+    from repro.models.layers import norm_apply
+    from repro.models.transformer import lm_head
+    h = norm_apply(params['final_norm'], h, cfg.norm)
+    if return_hidden:
+        return h, aux
+    return lm_head(params, h, cfg), aux
+
+
+# Decode after the multimodal prefill is pure-LM: reuse lm_decode_step.
+vlm_decode_step = lm_decode_step
+vlm_make_states = backbone_make_states
+vlm_states_abstract = backbone_states_abstract

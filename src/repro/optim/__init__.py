@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (Optimizer, adafactor, adamw, sgd,
+                                    constant_schedule, linear_schedule,
+                                    warmup_cosine_schedule)
+
+__all__ = ['Optimizer', 'adamw', 'adafactor', 'sgd', 'constant_schedule',
+           'linear_schedule', 'warmup_cosine_schedule']

@@ -1,0 +1,185 @@
+"""Optimizers (AdamW, Adafactor, SGD) and LR schedules — pure JAX, no optax.
+
+``Optimizer`` is a pair of pure functions over parameter pytrees:
+    init(params_or_abstract) -> state        (works on ShapeDtypeStructs too,
+                                              so the dry-run can lower a full
+                                              train_step without allocating)
+    update(grads, state, params, step) -> (new_params, new_state)
+
+For the 405B-scale dry-runs, AdamW supports reduced-precision moments
+(``moment_dtype='bfloat16'``) — 4 bytes/param of optimizer state instead of 8 —
+and Adafactor's factored second moment gives O(rows+cols).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+# ================================================================= schedules
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_schedule(lr: float, total_steps: int) -> Schedule:
+    def f(step):
+        frac = jnp.minimum(step / total_steps, 1.0)
+        return jnp.asarray(lr, jnp.float32) * (1.0 - frac)
+    return f
+
+
+def warmup_cosine_schedule(peak_lr: float, warmup_steps: int,
+                           total_steps: int, final_frac: float = 0.1
+                           ) -> Schedule:
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return f
+
+
+# ================================================================== optimizer
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple]
+
+
+def _like(p, dtype=None):
+    """zeros_like that also works on ShapeDtypeStruct leaves (dry-run)."""
+    dt = dtype or p.dtype
+    if isinstance(p, jax.ShapeDtypeStruct):
+        return jax.ShapeDtypeStruct(p.shape, dt, sharding=p.sharding)
+    return jnp.zeros(p.shape, dt)
+
+
+def sgd(schedule: Schedule, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {'mu': jax.tree_util.tree_map(_like, params),
+                'step': jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step=None):
+        step = state['step'] if step is None else step
+        lr = schedule(step)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g.astype(m.dtype), state['mu'], grads)
+        new_p = jax.tree_util.tree_map(
+            lambda p, m: (p.astype(jnp.float32)
+                          - lr * m.astype(jnp.float32)).astype(p.dtype),
+            params, mu)
+        return new_p, {'mu': mu, 'step': step + 1}
+
+    return Optimizer(init, update)
+
+
+def adamw(schedule: Schedule, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.01,
+          moment_dtype: Optional[str] = 'float32') -> Optimizer:
+    mdt = jnp.dtype(moment_dtype)
+
+    def init(params):
+        return {'m': jax.tree_util.tree_map(lambda p: _like(p, mdt), params),
+                'v': jax.tree_util.tree_map(lambda p: _like(p, mdt), params),
+                'step': jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step=None):
+        step = state['step'] if step is None else step
+        count = (step + 1).astype(jnp.float32)
+        lr = schedule(step)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            mhat = mf / (1 - b1 ** count)
+            vhat = vf / (1 - b2 ** count)
+            pf = p.astype(jnp.float32)
+            pf = pf - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * pf)
+            return pf.astype(p.dtype), mf.astype(mdt), vf.astype(mdt)
+
+        flat = jax.tree_util.tree_map(upd, params, grads, state['m'],
+                                      state['v'])
+        new_p = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {'m': new_m, 'v': new_v, 'step': step + 1}
+
+    return Optimizer(init, update)
+
+
+def adafactor(schedule: Schedule, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern 2018), the standard
+    choice for very large models: O(rows+cols) state for matrices."""
+
+    def _factored(p) -> bool:
+        return len(p.shape) >= 2
+
+    def _vr_vc_shapes(p):
+        return p.shape[:-1], p.shape[:-2] + p.shape[-1:]
+
+    def init(params):
+        def st(p):
+            if _factored(p):
+                sr, sc = _vr_vc_shapes(p)
+                if isinstance(p, jax.ShapeDtypeStruct):
+                    return {'vr': jax.ShapeDtypeStruct(sr, jnp.float32),
+                            'vc': jax.ShapeDtypeStruct(sc, jnp.float32)}
+                return {'vr': jnp.zeros(sr, jnp.float32),
+                        'vc': jnp.zeros(sc, jnp.float32)}
+            return {'v': _like(p, jnp.float32)}
+        return {'f': jax.tree_util.tree_map(
+            st, params, is_leaf=lambda x: hasattr(x, 'shape')),
+            'step': jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step=None):
+        step = state['step'] if step is None else step
+        count = (step + 1).astype(jnp.float32)
+        lr = schedule(step)
+        b2 = 1.0 - count ** -0.8
+
+        def upd(p, g, st):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if _factored(p):
+                vr = b2 * st['vr'] + (1 - b2) * jnp.mean(g2, axis=-1)
+                vc = b2 * st['vc'] + (1 - b2) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] / jnp.mean(vr, axis=-1, keepdims=True)
+                    [..., None] * vc[..., None, :])
+                u = gf / jnp.maximum(denom, 1e-30)
+                new_st = {'vr': vr, 'vc': vc}
+            else:
+                v = b2 * st['v'] + (1 - b2) * g2
+                u = gf / jnp.sqrt(v)
+                new_st = {'v': v}
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            pf = p.astype(jnp.float32)
+            pf = pf - lr * (u + weight_decay * pf)
+            return pf.astype(p.dtype), new_st
+
+        is_state = lambda x: isinstance(x, dict) and ('v' in x or 'vr' in x)
+        flat = jax.tree_util.tree_map(
+            upd, params, grads, state['f'],
+            is_leaf=lambda x: hasattr(x, 'shape') or is_state(x))
+        new_p = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_f = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {'f': new_f, 'step': step + 1}
+
+    return Optimizer(init, update)

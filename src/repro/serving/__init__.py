@@ -1,0 +1,4 @@
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.sampler import sample_tokens
+
+__all__ = ['Request', 'ServingEngine', 'sample_tokens']

@@ -1,0 +1,163 @@
+"""Batched serving engine with token-level continuous batching (Orca-style).
+
+Every engine iteration advances ALL occupied slots by one token through a
+single jit'd ``decode_step``. A slot whose request still has prompt tokens
+left consumes the next prompt token (prefill and decode are thus unified at
+token granularity); otherwise it consumes its previously sampled token.
+Finished slots are freed and refilled from the queue — no head-of-line
+blocking.
+
+THE PAPER lives here: constructing the engine with ``precomputed=`` makes
+every step's embedding-read + layer-0 projections a single row gather —
+the decode phase is exactly the low-batch, memory-bound regime where the
+paper's savings are largest (`benchmarks/first_layer_latency.py` measures
+it; `examples/serve_batched.py` demos it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.serving.sampler import sample_tokens
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                    # (P,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    submit_t: float = 0.0
+    first_token_t: float = 0.0
+    finish_t: float = 0.0
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, *, max_slots: int = 8,
+                 max_seq: int = 512, precomputed=None, seed: int = 0,
+                 dtype=jnp.float32, kv_quant: bool = False):
+        self.model, self.params = model, params
+        self.max_slots, self.max_seq = max_slots, max_seq
+        self.precomputed = precomputed
+        self.states = model.make_states(max_slots, max_seq, dtype,
+                                        kv_quant=kv_quant)
+        self._meta = getattr(model.cfg, 'num_meta_tokens', 0)
+        if self._meta:
+            # prime hymba-style learnable meta tokens into every slot's state
+            from repro.models.transformer import prime_meta_states
+            self.states = prime_meta_states(params, self.states, model.cfg,
+                                            max_slots)
+        # template for clean slot reuse (covers caches AND recurrent states)
+        self._fresh = jax.tree_util.tree_map(lambda x: x, self.states)
+        self.slot_req: List[Optional[Request]] = [None] * max_slots
+        self.slot_pos = np.zeros(max_slots, np.int64)       # next position
+        self.slot_next_tok = np.zeros(max_slots, np.int32)  # token to feed
+        self.queue: List[Request] = []
+        self.key = jax.random.PRNGKey(seed)
+        self.steps = 0
+
+        def step(params, states, tokens, pos, key, temps):
+            logits, states = model.decode_step(
+                params, tokens, states, pos, precomputed=precomputed)
+            nxt = sample_tokens(logits[:, 0], key, temps)
+            return states, logits, nxt
+
+        self._step = jax.jit(step)
+
+    # ------------------------------------------------------------- plumbing
+    def submit(self, req: Request) -> None:
+        req.submit_t = time.time()
+        self.queue.append(req)
+
+    def _reset_slot(self, slot: int) -> None:
+        """Restore one slot's state (KV cache validity, recurrent/conv state,
+        primed meta prefix) from the fresh template — no cross-request
+        leakage on slot reuse. Stacked ('body') states carry the scan axis
+        first, so their batch axis is 1.
+        """
+        def reset(path: str, leaf, fresh):
+            batch_axis = 1 if '/body/' in path or path.startswith('body/') \
+                else 0
+            idx = (slice(None),) * batch_axis + (slot,)
+            return leaf.at[idx].set(fresh[idx])
+
+        from repro.checkpoint.ckpt import _flatten, _unflatten
+        flat = _flatten(self.states)
+        flat_fresh = _flatten(self._fresh)
+        self.states = _unflatten({p: reset('/' + p, v, flat_fresh[p])
+                                  for p, v in flat.items()})
+
+    def _admit(self) -> None:
+        for slot in range(self.max_slots):
+            if self.slot_req[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[slot] = req
+                self.slot_pos[slot] = self._meta   # tokens start after meta
+                self.slot_next_tok[slot] = int(req.prompt[0])
+                self._reset_slot(slot)
+
+    # ----------------------------------------------------------------- run
+    def step_once(self) -> None:
+        self._admit()
+        active = [s for s in range(self.max_slots)
+                  if self.slot_req[s] is not None]
+        if not active:
+            return
+        tokens = jnp.asarray(self.slot_next_tok[:, None])
+        pos = jnp.asarray(self.slot_pos.astype(np.int32))
+        temps = jnp.asarray([
+            (self.slot_req[s].temperature if self.slot_req[s] else 0.0)
+            for s in range(self.max_slots)], jnp.float32)
+        self.key, sub = jax.random.split(self.key)
+        self.states, logits, nxt = self._step(
+            self.params, self.states, tokens, pos, sub, temps)
+        nxt = np.asarray(nxt)
+        self.steps += 1
+        for s in active:
+            req = self.slot_req[s]
+            self.slot_pos[s] += 1
+            p = int(self.slot_pos[s]) - self._meta   # progress within request
+            if p < len(req.prompt):                  # still prefilling
+                self.slot_next_tok[s] = int(req.prompt[p])
+                continue
+            tok = int(nxt[s])
+            if not req.generated:
+                req.first_token_t = time.time()
+            req.generated.append(tok)
+            self.slot_next_tok[s] = tok
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            if hit_eos or len(req.generated) >= req.max_new_tokens \
+                    or int(self.slot_pos[s]) + 1 >= self.max_seq:
+                req.done, req.finish_t = True, time.time()
+                self.slot_req[s] = None
+
+    def run(self, max_iters: int = 100_000) -> None:
+        it = 0
+        while (self.queue or any(r is not None for r in self.slot_req)) \
+                and it < max_iters:
+            self.step_once()
+            it += 1
+
+    # ------------------------------------------------------------- metrics
+    def stats(self, requests: List[Request]) -> Dict[str, float]:
+        done = [r for r in requests if r.done]
+        toks = sum(len(r.generated) for r in done)
+        lat = [r.finish_t - r.submit_t for r in done]
+        ttft = [r.first_token_t - r.submit_t for r in done
+                if r.first_token_t]
+        return {
+            'completed': len(done), 'tokens': toks,
+            'mean_latency_s': float(np.mean(lat)) if lat else 0.0,
+            'mean_ttft_s': float(np.mean(ttft)) if ttft else 0.0,
+            'engine_steps': self.steps,
+        }

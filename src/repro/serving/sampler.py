@@ -1,0 +1,18 @@
+"""Token sampling: greedy / temperature / top-k, batched and jit-friendly."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(logits: jax.Array, key: jax.Array,
+                  temperature: jax.Array, top_k: int = 0) -> jax.Array:
+    """logits (B,V); temperature (B,) — 0 means greedy for that row."""
+    lf = logits.astype(jnp.float32)
+    if top_k:
+        kth = jnp.sort(lf, axis=-1)[:, -top_k][:, None]
+        lf = jnp.where(lf < kth, -jnp.inf, lf)
+    greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    temp = jnp.maximum(temperature, 1e-6)[:, None]
+    sampled = jax.random.categorical(key, lf / temp, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy, sampled)

@@ -1,0 +1,138 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Tensors throughout the model are declared with *logical* axis names. A
+:class:`Rules` table maps each logical axis to a mesh axis (or ``None`` for
+replication). Changing a distribution strategy (tensor-parallel vs FSDP vs
+context-parallel decode) is a rules change only — model code never names mesh
+axes directly.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+class Rules:
+    def __init__(self, table: Dict[str, MeshAxes], mesh: Optional[Mesh] = None):
+        self.table = dict(table)
+        self.mesh = mesh
+
+    def with_overrides(self, **kw: MeshAxes) -> 'Rules':
+        t = dict(self.table)
+        t.update(kw)
+        return Rules(t, self.mesh)
+
+    def spec(self, logical_axes: Sequence[Optional[str]]) -> P:
+        """PartitionSpec for a tensor with the given logical axes.
+
+        A mesh axis may appear at most once in a spec; later duplicate uses are
+        dropped to replication (e.g. a (vocab, embed) table where both map to
+        'model' shards only vocab).
+        """
+        used: set = set()
+        out = []
+        for ax in logical_axes:
+            m = self.table.get(ax) if ax is not None else None
+            if m is None:
+                out.append(None)
+                continue
+            axes = (m,) if isinstance(m, str) else tuple(m)
+            axes = tuple(a for a in axes if a not in used)
+            if not axes:
+                out.append(None)
+                continue
+            used.update(axes)
+            out.append(axes[0] if len(axes) == 1 else axes)
+        return P(*out)
+
+    def spec_for_shape(self, shape: Sequence[int],
+                       logical_axes: Sequence[Optional[str]]) -> P:
+        """Like :meth:`spec`, but drops mesh axes that don't divide the
+        corresponding dimension (GSPMD would pad; we prefer replication —
+        this is what makes batch=1 long-decode and kv_heads < model-axis
+        configs lower cleanly without per-arch special cases)."""
+        base = self.spec(logical_axes)
+        if self.mesh is None:
+            return base
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        out = []
+        for dim, entry in zip(shape, tuple(base) + (None,) * (len(shape) - len(base))):
+            if entry is None:
+                out.append(None)
+                continue
+            axes = (entry,) if isinstance(entry, str) else tuple(entry)
+            total = 1
+            kept = []
+            for a in axes:
+                if a not in sizes:          # axis absent from this mesh
+                    continue
+                if dim % (total * sizes[a]) == 0:
+                    kept.append(a)
+                    total *= sizes[a]
+            out.append(None if not kept
+                       else (kept[0] if len(kept) == 1 else tuple(kept)))
+        return P(*out)
+
+    def sharding(self, logical_axes: Sequence[Optional[str]]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(logical_axes))
+
+    def sharding_for_shape(self, shape: Sequence[int],
+                           logical_axes: Sequence[Optional[str]]
+                           ) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec_for_shape(shape, logical_axes))
+
+    def constrain(self, x, logical_axes: Sequence[Optional[str]]):
+        """Apply a sharding constraint inside jit (no-op without a mesh)."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(logical_axes)))
+
+
+def default_rules(mesh: Optional[Mesh] = None, *, batch_axes: MeshAxes = 'data',
+                  fsdp: bool = False, shard_kv_heads: bool = True,
+                  shard_cache_seq: bool = False) -> Rules:
+    """Standard rules for the ('data','model') (+ optional 'pod') mesh.
+
+    - batch over data (and pod when multi-pod)
+    - tensor-parallel over model: heads / mlp hidden / vocab / experts
+    - fsdp=True additionally shards the params' embed dim over data (ZeRO-3 style)
+    - shard_cache_seq=True context-parallel-shards KV cache sequence over model
+      (used when kv_heads don't divide the model axis, or batch==1 long decode)
+    """
+    table: Dict[str, MeshAxes] = {
+        'batch': batch_axes,
+        'seq': None,
+        'embed': 'data' if fsdp else None,
+        'embed_act': None,            # activations' embed dim stays replicated
+        'heads': 'model',
+        'kv_heads': 'model' if shard_kv_heads else None,
+        'cache_seq': 'model' if shard_cache_seq else None,
+        'qkv_out': 'model',           # fused/stacked qkv output dim
+        'mlp': 'model',
+        'vocab': 'model',
+        'experts': 'model',
+        'expert_mlp': None,
+        'conv_k': None,
+        'state': None,
+        'layers': None,
+        'table_row': None,            # precomputed-table row dimension
+    }
+    return Rules(table, mesh)
+
+
+def logical_sds(shape: Sequence[int], dtype, logical_axes: Sequence[Optional[str]],
+                rules: Rules) -> jax.ShapeDtypeStruct:
+    """ShapeDtypeStruct carrying the NamedSharding implied by the rules
+    (divisibility-checked; non-divisible axes fall back to replication)."""
+    return jax.ShapeDtypeStruct(
+        tuple(shape), dtype,
+        sharding=rules.sharding_for_shape(shape, logical_axes))

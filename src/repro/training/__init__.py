@@ -1,0 +1,4 @@
+from repro.training.train_loop import (TrainConfig, cross_entropy_loss,
+                                       make_train_step, train)
+
+__all__ = ['TrainConfig', 'cross_entropy_loss', 'make_train_step', 'train']

@@ -1,0 +1,153 @@
+"""Training loop: loss, jit'd train_step factory, driver.
+
+The same ``make_train_step`` serves three callers:
+- CPU example training runs (tiny models, real arrays),
+- the smoke tests (one step per architecture),
+- the multi-pod dry-run (abstract params + inputs, ``.lower().compile()``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim import Optimizer
+from repro.sharding import Rules
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    aux_weight: float = 0.01        # MoE load-balance loss weight
+    z_weight: float = 1e-4          # z-loss (softmax normalizer regulariser)
+    remat: bool = False
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0
+
+
+def cross_entropy_loss(logits: jax.Array, targets: jax.Array,
+                       z_weight: float = 0.0) -> jax.Array:
+    """Masked token-mean cross entropy in fp32. targets < 0 are ignored."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    tgt = jnp.maximum(targets, 0)
+    picked = jnp.take_along_axis(lf, tgt[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    if z_weight:
+        nll = nll + z_weight * jnp.square(lse)
+    mask = (targets >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def chunked_cross_entropy(head_fn, h: jax.Array, targets: jax.Array,
+                          z_weight: float = 0.0, chunk: int = 512
+                          ) -> jax.Array:
+    """Cross entropy WITHOUT ever materialising (B, S, V) logits.
+
+    The head projection + softmax run per sequence chunk under
+    ``jax.checkpoint`` — forward keeps one (B, chunk, V) buffer alive and
+    backward recomputes it per chunk. This is what lets 256k-vocab models
+    (gemma3) train without the loss dominating device memory.
+    """
+    B, S, D = h.shape
+    if S <= chunk:
+        return cross_entropy_loss(head_fn(h), targets, z_weight)
+    Sp = -(-S // chunk) * chunk
+    if Sp != S:
+        h = jnp.pad(h, ((0, 0), (0, Sp - S), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, Sp - S)),
+                          constant_values=-1)
+    nC = Sp // chunk
+    hc = jnp.moveaxis(h.reshape(B, nC, chunk, D), 1, 0)
+    tc = jnp.moveaxis(targets.reshape(B, nC, chunk), 1, 0)
+
+    @jax.checkpoint
+    def one(hc_t, tc_t):
+        lf = head_fn(hc_t).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        picked = jnp.take_along_axis(
+            lf, jnp.maximum(tc_t, 0)[..., None], axis=-1)[..., 0]
+        nll = lse - picked
+        if z_weight:
+            nll = nll + z_weight * jnp.square(lse)
+        mask = (tc_t >= 0).astype(jnp.float32)
+        return jnp.sum(nll * mask), jnp.sum(mask)
+
+    def body(carry, xs):
+        s, n = one(*xs)
+        return (carry[0] + s, carry[1] + n), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (hc, tc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def make_loss_fn(model: Model, tcfg: TrainConfig, rules: Optional[Rules]):
+    def loss_fn(params, batch):
+        h, aux = model.apply(params, batch, rules=rules, remat=tcfg.remat,
+                             return_hidden=True)
+        targets = batch['targets']
+        if h.shape[1] != targets.shape[1]:
+            # VLM: image-span positions carry no next-token target
+            pad = h.shape[1] - targets.shape[1]
+            from repro.models.model import VLM_PREFIX
+            neg = -jnp.ones((targets.shape[0], pad), targets.dtype)
+            targets = jnp.concatenate(
+                [targets[:, :VLM_PREFIX], neg, targets[:, VLM_PREFIX:]],
+                axis=1)
+        loss = chunked_cross_entropy(lambda hh: model.head(params, hh),
+                                     h, targets, tcfg.z_weight)
+        return loss + tcfg.aux_weight * aux, (loss, aux)
+    return loss_fn
+
+
+def make_train_step(model: Model, opt: Optimizer, tcfg: TrainConfig,
+                    rules: Optional[Rules] = None) -> Callable:
+    """-> train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    Pure function of its inputs; callers jit it (with shardings, for the
+    production mesh) or lower it abstractly (dry-run).
+    """
+    loss_fn = make_loss_fn(model, tcfg, rules)
+
+    def train_step(params, opt_state, batch):
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+        (total, (loss, aux)), grads = grad_fn(params, batch)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(grads)))
+        return new_params, new_state, {
+            'loss': loss, 'total_loss': total, 'aux': aux, 'grad_norm': gnorm}
+
+    return train_step
+
+
+def train(model: Model, params, opt: Optimizer, data: Iterator[Dict],
+          tcfg: TrainConfig, rules: Optional[Rules] = None,
+          log: Callable[[str], None] = print):
+    """Simple driver used by examples and launch/train.py."""
+    from repro.data import shard_batch
+    step_fn = jax.jit(make_train_step(model, opt, tcfg, rules))
+    opt_state = opt.init(params)
+    history = []
+    t0 = time.time()
+    for step in range(tcfg.steps):
+        batch = shard_batch(next(data), rules)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({'step': step, **m})
+            log(f'step {step:5d} loss {m["loss"]:.4f} '
+                f'aux {m["aux"]:.4f} gnorm {m["grad_norm"]:.2f} '
+                f'({time.time() - t0:.1f}s)')
+        if tcfg.ckpt_dir and tcfg.ckpt_every \
+                and step and step % tcfg.ckpt_every == 0:
+            from repro.checkpoint import save_checkpoint
+            save_checkpoint(tcfg.ckpt_dir, params, step)
+    return params, opt_state, history

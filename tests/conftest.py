@@ -1,0 +1,12 @@
+import os
+import sys
+
+# Tests run single-device (the dry-run sets its own device count); make sure
+# nothing here inherits a forced 512-device env.
+os.environ.pop('XLA_FLAGS', None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..', 'src'))
+
+import jax
+
+jax.config.update('jax_enable_x64', False)

@@ -1,0 +1,101 @@
+"""Property-based tests for the paper's accounting (core/analysis) and the
+precompute-table invariants, over randomly drawn architectures.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.config import ModelConfig
+from repro.core import analyze, build_precomputed_table, eliminated_weights, \
+    weight_counts
+from repro.models.model import Model
+
+
+def draw_cfg(heads, kv_div, hd, layers, dff_mult, vocab, parallel):
+    kv = max(1, heads // kv_div)
+    d = heads * hd
+    return ModelConfig(
+        name='h', arch_class='dense', num_layers=layers, d_model=d,
+        num_heads=heads, num_kv_heads=kv, head_dim=hd, d_ff=d * dff_mult,
+        vocab_size=vocab, block_type='parallel' if parallel else 'serial',
+        glu=not parallel, act='gelu' if parallel else 'silu',
+        norm='layernorm' if parallel else 'rmsnorm', dtype='float32')
+
+
+@settings(max_examples=25, deadline=None)
+@given(heads=st.sampled_from([2, 4, 8]), kv_div=st.sampled_from([1, 2, 4]),
+       hd=st.sampled_from([8, 16]), layers=st.integers(2, 6),
+       dff_mult=st.sampled_from([2, 4]), vocab=st.integers(50, 500),
+       parallel=st.booleans())
+def test_row_width_is_paper_2_d_plus_e(heads, kv_div, hd, layers, dff_mult,
+                                       vocab, parallel):
+    cfg = draw_cfg(heads, kv_div, hd, layers, dff_mult, vocab, parallel)
+    a = analyze(cfg)
+    # paper: 2(d+e) whenever q_size == d (always true here)
+    assert a.row_width == 2 * (cfg.d_model + cfg.kv_size)
+    assert a.reads_with_b1 == a.row_width
+    assert a.table_growth == (a.row_width - cfg.d_model) * cfg.vocab_size
+    assert a.net_memory_delta == a.table_growth - a.eliminated_weights
+
+
+@settings(max_examples=15, deadline=None)
+@given(heads=st.sampled_from([2, 4]), kv_div=st.sampled_from([1, 2]),
+       layers=st.integers(2, 4), vocab=st.integers(40, 200),
+       parallel=st.booleans(), seed=st.integers(0, 99))
+def test_precompute_equivalence_random_archs(heads, kv_div, layers, vocab,
+                                             parallel, seed):
+    """For ANY drawn dense config, the precomputed model == the baseline."""
+    cfg = draw_cfg(heads, kv_div, 8, layers, 2, vocab, parallel)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    toks = jax.random.randint(jax.random.PRNGKey(seed + 1), (1, 9), 0, vocab)
+    base, _ = model.apply(params, {'tokens': toks})
+    table = build_precomputed_table(params, cfg)
+    assert table.table.shape == (vocab, cfg.precompute_row_width)
+    pre, _ = model.apply(params, {'tokens': toks}, precomputed=table)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(pre), atol=3e-4,
+                               rtol=3e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(heads=st.sampled_from([2, 4, 8]), kv_div=st.sampled_from([1, 2]),
+       hd=st.sampled_from([8, 16]), layers=st.integers(2, 6),
+       dff_mult=st.sampled_from([2, 4]), vocab=st.integers(50, 500))
+def test_parallel_eliminates_strictly_more(heads, kv_div, hd, layers,
+                                           dff_mult, vocab):
+    """Parallel blocks fold the FFN in -> strictly more eliminated weights,
+    same row width (the paper's central contrast)."""
+    ser = draw_cfg(heads, kv_div, hd, layers, dff_mult, vocab, False)
+    par = draw_cfg(heads, kv_div, hd, layers, dff_mult, vocab, True)
+    assert eliminated_weights(par) > eliminated_weights(ser)
+    assert analyze(par).row_width == analyze(ser).row_width
+
+
+@settings(max_examples=20, deadline=None)
+@given(batch=st.integers(1, 2048))
+def test_reduction_factor_monotone_in_batch(batch):
+    """Savings shrink with batch (weights amortise) but reads-with-precompute
+    never exceed reads-without (factor >= ... well, > 0 and decreasing)."""
+    cfg = draw_cfg(8, 2, 16, 4, 4, 500, False)
+    a = analyze(cfg)
+    f1 = a.reduction_factor(batch, cfg.d_model)
+    f2 = a.reduction_factor(batch + 1, cfg.d_model)
+    assert f2 <= f1
+    assert f1 > 0
+
+
+def test_gather_split_roundtrip():
+    """Table gather + split reproduces exactly the per-piece projections."""
+    cfg = draw_cfg(4, 2, 8, 2, 2, 64, False)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    table = build_precomputed_table(params, cfg)
+    ids = jnp.arange(10)
+    pieces = table.gather(ids)
+    assert set(pieces) == {'x', 'q', 'k', 'v'}
+    assert pieces['x'].shape == (10, cfg.d_model)
+    assert pieces['k'].shape == (10, cfg.kv_size)
+    rows = jnp.take(table.table, ids, axis=0)
+    re = jnp.concatenate([pieces[n] for n, _ in table.layout], axis=-1)
+    np.testing.assert_array_equal(np.asarray(rows), np.asarray(re))

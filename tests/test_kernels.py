@@ -1,0 +1,151 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+across shape/dtype sweeps + hypothesis property tests.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.embed_gather import embed_gather
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.rmsnorm_qkv import rmsnorm_matmul
+
+
+def rnd(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+# ------------------------------------------------------------- embed gather
+@pytest.mark.parametrize('dtype', [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize('V,W,N', [(64, 128, 8), (100, 256, 17),
+                                   (503, 384, 33), (1000, 130, 5)])
+def test_embed_gather_shapes(V, W, N, dtype):
+    table = rnd(0, (V, W), dtype)
+    ids = jax.random.randint(jax.random.PRNGKey(1), (N,), 0, V)
+    got = ops.embed_gather_rows(table, ids)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.embed_gather_ref(table, ids)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(v=st.integers(4, 200), n=st.integers(1, 40),
+       w128=st.integers(1, 3), seed=st.integers(0, 2 ** 16))
+def test_embed_gather_property(v, n, w128, seed):
+    table = rnd(seed, (v, 128 * w128))
+    ids = jax.random.randint(jax.random.PRNGKey(seed + 1), (n,), 0, v)
+    got = embed_gather(table, ids.astype(jnp.int32), interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(table)[ids])
+
+
+# -------------------------------------------------------------- rmsnorm qkv
+@pytest.mark.parametrize('dtype', [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize('N,d,q,e', [(64, 64, 64, 32), (128, 128, 256, 64),
+                                     (33, 96, 96, 24)])
+def test_rmsnorm_qkv(N, d, q, e, dtype):
+    x = rnd(0, (N, d), dtype)
+    scale = (rnd(1, (d,)) * 0.1 + 1.0).astype(dtype)
+    wq, wk, wv = rnd(2, (d, q), dtype), rnd(3, (d, e), dtype), \
+        rnd(4, (d, e), dtype)
+    gq, gk, gv = ops.rmsnorm_qkv(x, scale, wq, wk, wv)
+    eq, ek, ev = ref.rmsnorm_qkv_ref(x, scale, wq, wk, wv)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    for g, want in ((gq, eq), (gk, ek), (gv, ev)):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(want, np.float32),
+                                   atol=tol, rtol=tol)
+
+
+def test_rmsnorm_qkv_batched_leading_dims():
+    x = rnd(0, (2, 7, 64))
+    scale = jnp.ones((64,))
+    wq, wk, wv = rnd(1, (64, 64)), rnd(2, (64, 32)), rnd(3, (64, 32))
+    q, k, v = ops.rmsnorm_qkv(x, scale, wq, wk, wv)
+    assert q.shape == (2, 7, 64) and k.shape == (2, 7, 32)
+    eq, _, _ = ref.rmsnorm_qkv_ref(x.reshape(-1, 64), scale, wq, wk, wv)
+    np.testing.assert_allclose(np.asarray(q).reshape(-1, 64),
+                               np.asarray(eq), atol=1e-5)
+
+
+# ----------------------------------------------------------- flash attention
+@pytest.mark.parametrize('dtype', [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize('B,S,H,KH,d,window',
+                         [(1, 128, 2, 2, 32, 0), (2, 256, 4, 2, 32, 0),
+                          (2, 256, 4, 1, 64, 40), (1, 192, 8, 2, 16, 64)])
+def test_flash_attention(B, S, H, KH, d, window, dtype):
+    q, k, v = rnd(0, (B, S, H, d), dtype), rnd(1, (B, S, KH, d), dtype), \
+        rnd(2, (B, S, KH, d), dtype)
+    got = ops.flash_attention_bshd(q, k, v, window=window, block=64)
+    want = ref.flash_attention_ref(q, k, v, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(65, 200), h=st.sampled_from([1, 2, 4]),
+       g=st.sampled_from([1, 2]), window=st.sampled_from([0, 16, 50]),
+       seed=st.integers(0, 2 ** 16))
+def test_flash_attention_property(s, h, g, window, seed):
+    d = 16
+    q = rnd(seed, (1, s, h * g, d))
+    k = rnd(seed + 1, (1, s, h, d))
+    v = rnd(seed + 2, (1, s, h, d))
+    got = ops.flash_attention_bshd(q, k, v, window=window, block=64)
+    want = ref.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------- decode attention
+@pytest.mark.parametrize('window', [0, 32])
+@pytest.mark.parametrize('B,H,KH,d,Sc', [(2, 4, 2, 32, 96), (3, 8, 8, 16, 64),
+                                         (1, 2, 1, 64, 130)])
+def test_decode_attention(B, H, KH, d, Sc, window):
+    q = rnd(0, (B, H, d))
+    kc, vc = rnd(1, (B, Sc, KH, d)), rnd(2, (B, Sc, KH, d))
+    cpos = jnp.where(
+        jax.random.uniform(jax.random.PRNGKey(3), (B, Sc)) < 0.7,
+        jax.random.randint(jax.random.PRNGKey(4), (B, Sc), 0, 150), -1)
+    pos = jax.random.randint(jax.random.PRNGKey(5), (B,), 10, 150)
+    got = ops.decode_attention_cache(q, kc, vc, cpos, pos, window=window,
+                                     block=32)
+    want = ref.decode_attention_ref(q, kc, vc, cpos, pos, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_decode_attention_empty_cache_is_safe():
+    """All slots empty -> uniform-over-nothing; must not NaN."""
+    B, H, KH, d, Sc = 1, 2, 1, 16, 32
+    q = rnd(0, (B, H, d))
+    kc, vc = rnd(1, (B, Sc, KH, d)), rnd(2, (B, Sc, KH, d))
+    cpos = jnp.full((B, Sc), -1, jnp.int32)
+    out = ops.decode_attention_cache(q, kc, vc, cpos, jnp.zeros((B,),
+                                                                jnp.int32))
+    assert not bool(jnp.isnan(out).any())
+
+
+# -------------------------------------------- kernels vs models (three-way)
+def test_flash_kernel_matches_model_blocked_attention():
+    """Pallas kernel == pure-JAX blocked core == naive core."""
+    from repro.config import ModelConfig
+    from repro.models.attention import blocked_attention_core
+    cfg = ModelConfig(name='t', arch_class='dense', num_layers=1, d_model=64,
+                      num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                      vocab_size=97, pos='none', dtype='float32')
+    B, S = 2, 256
+    q = rnd(0, (B, S, cfg.q_size))
+    k = rnd(1, (B, S, cfg.kv_size))
+    v = rnd(2, (B, S, cfg.kv_size))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    jax_out = blocked_attention_core(q, k, v, pos, cfg, rope_theta=1e4,
+                                     block_q=64, block_k=64)
+    kern = ops.flash_attention_bshd(
+        q.reshape(B, S, 4, 16), k.reshape(B, S, 2, 16),
+        v.reshape(B, S, 2, 16), block=64).reshape(B, S, -1)
+    np.testing.assert_allclose(np.asarray(jax_out), np.asarray(kern),
+                               atol=1e-5, rtol=1e-4)

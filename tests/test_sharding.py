@@ -1,0 +1,137 @@
+"""Sharding rules + dry-run plumbing tests (single-device trivial mesh)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.config import INPUT_SHAPES
+from repro.configs import get_smoke_config
+from repro.launch.hlo_analysis import collective_bytes, roofline_terms, \
+    shape_bytes
+from repro.models.layers import abstract_params
+from repro.models.model import Model
+from repro.sharding import Rules, default_rules
+
+
+def test_spec_basic_and_duplicate_drop():
+    rules = Rules({'vocab': 'model', 'embed': 'model', 'batch': 'data'})
+    # both axes map to 'model': only the first keeps it
+    assert rules.spec(('vocab', 'embed')) == P('model', None)
+    assert rules.spec(('batch', None, 'vocab')) == P('data', None, 'model')
+
+
+def test_spec_for_shape_divisibility_fallback():
+    mesh = jax.make_mesh((1, 1), ('data', 'model'))
+    rules = Rules({'kv': 'model', 'batch': ('pod', 'data')}, mesh)
+    # trivial mesh: sizes 1 divide everything -> kept
+    assert rules.spec_for_shape((8, 4), ('batch', 'kv'))[1] == 'model'
+
+
+def test_spec_for_shape_drops_nondivisible():
+    class FakeMesh:
+        axis_names = ('data', 'model')
+        class devices:
+            shape = (4, 8)
+    rules = Rules({'kv': 'model', 'batch': 'data'}, FakeMesh())
+    spec = rules.spec_for_shape((3, 5), ('batch', 'kv'))
+    assert spec == P(None, None)          # 3 % 4 != 0, 5 % 8 != 0
+    spec2 = rules.spec_for_shape((8, 16), ('batch', 'kv'))
+    assert spec2 == P('data', 'model')
+
+
+def test_tuple_axis_partial_divisibility():
+    class FakeMesh:
+        axis_names = ('pod', 'data', 'model')
+        class devices:
+            shape = (2, 16, 16)
+    rules = Rules({'batch': ('pod', 'data')}, FakeMesh())
+    # 32 % (2*16) == 0 -> keep both
+    assert rules.spec_for_shape((32,), ('batch',)) == P(('pod', 'data'))
+    # 16 % 2 == 0 but 16 % 32 != 0 -> keep only 'pod'
+    assert rules.spec_for_shape((16,), ('batch',)) == P('pod')
+    # 1 -> replicate
+    assert rules.spec_for_shape((1,), ('batch',)) == P(None)
+
+
+# ----------------------------------------------------------- hlo analysis
+def test_shape_bytes():
+    assert shape_bytes('bf16[128,4096]{1,0}') == 128 * 4096 * 2
+    assert shape_bytes('f32[16]{0}') == 64
+    assert shape_bytes('(f32[8,8]{1,0}, bf16[4]{0})') == 256 + 8
+    assert shape_bytes('pred[]') == 0 or shape_bytes('pred[]') == 1
+
+
+def test_collective_bytes_with_while_trip_count():
+    hlo = '''
+HloModule m
+%cond (p: s32[]) -> pred[] {
+  %p = s32[] parameter(0)
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(%p, %c), direction=LT
+}
+%body (p: s32[]) -> s32[] {
+  %p = s32[] parameter(0)
+  %ag = f32[64]{0} all-gather(%p), dimensions={0}
+  ROOT %n = s32[] add(%p, %p)
+}
+ENTRY %main () -> s32[] {
+  %init = s32[] constant(0)
+  %ar = f32[128]{0} all-reduce(%init), to_apply=%cond
+  ROOT %w = s32[] while(%init), condition=%cond, body=%body
+}
+'''
+    out = collective_bytes(hlo)
+    assert out['all-gather'] == 64 * 4 * 7        # in-body x trip count
+    assert out['all-reduce'] == 128 * 4
+    assert out['total'] == out['all-gather'] + out['all-reduce']
+
+
+def test_roofline_terms_bottleneck():
+    r = roofline_terms(197e12, 100e9, 1e9)        # 1s compute, tiny rest
+    assert r['bottleneck'] == 'compute'
+    r2 = roofline_terms(1e9, 819e9, 0)
+    assert r2['bottleneck'] == 'memory'
+
+
+# ------------------------------------------------ dry-run plumbing (1-device)
+@pytest.mark.parametrize('shape_name', ['train_4k', 'decode_32k'])
+def test_input_specs_and_abstract_params(shape_name):
+    """Smoke config + trivial mesh: specs build, abstract params carry
+    shardings, nothing allocates."""
+    mesh = jax.make_mesh((1, 1), ('data', 'model'))
+    from repro.launch.mesh import rules_for
+    cfg = get_smoke_config('gemma3_1b')
+    shape = INPUT_SHAPES[shape_name]
+    rules = rules_for(cfg, shape, mesh)
+    model = Model(cfg)
+    specs = model.input_specs(shape, rules)
+    if shape.mode == 'train':
+        assert specs['tokens'].shape == (shape.global_batch, shape.seq_len)
+    else:
+        assert specs['tokens'].shape == (shape.global_batch, 1)
+        assert 'states' in specs
+    ap = abstract_params(model.schema(), rules, cfg.dtype)
+    leaves = jax.tree_util.tree_leaves(
+        ap, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+
+
+def test_windowed_cache_is_small():
+    """long-decode story: a windowed layer's abstract cache is window-sized,
+    a global layer's is full-length."""
+    import dataclasses
+    cfg = dataclasses.replace(get_smoke_config('gemma3_1b'), num_layers=13)
+    mesh = jax.make_mesh((1, 1), ('data', 'model'))
+    from repro.launch.mesh import rules_for
+    rules = rules_for(cfg, INPUT_SHAPES['decode_32k'], mesh)
+    model = Model(cfg)
+    states = model.states_abstract(4, 32768, rules)
+    from repro.models.transformer import layer_plan
+    plan = layer_plan(cfg)
+    assert plan.reps == 2
+    for s, kind in enumerate(plan.slots):
+        sc = states['body'][s]['k'].shape[2]  # (reps, B, Sc, KV, hd)
+        if kind == 'local':
+            assert sc == cfg.window
+        else:
+            assert sc == 32768
