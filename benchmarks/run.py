@@ -35,8 +35,10 @@ def main() -> None:
     section(lambda: bench_first_layer(parallel=True), 'first_layer_parallel')
     section(bench_savings_vs_depth, 'savings_bound')
 
-    from benchmarks.serving_throughput import bench_serving
+    from benchmarks.serving_throughput import bench_serving, \
+        bench_serving_prompt_heavy
     section(bench_serving, 'serving')
+    section(bench_serving_prompt_heavy, 'serving_prompt_heavy')
 
     from benchmarks.kernel_micro import bench_kernels
     section(bench_kernels, 'kernels')

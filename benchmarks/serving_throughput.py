@@ -1,11 +1,22 @@
-"""End-to-end serving benchmark: batched engine throughput and per-token
-latency with vs without the precomputed first layer (the paper's deployment
-scenario), on a small CPU model.
+"""End-to-end serving benchmarks on a small CPU model.
+
+Two workloads:
+- **decode-heavy** (the paper's deployment scenario): short prompts, long
+  generations, with vs without the precomputed first layer.
+- **prompt-heavy** (chunked-prefill target): long prompts, short
+  generations — time-to-first-token with the token-by-token seed engine vs
+  the chunked-prefill scheduler (``chunk_size`` prompt tokens per dispatch).
+
+``bench_serving_prompt_heavy`` also writes ``BENCH_serving.json`` (repo
+root) so the perf trajectory is machine-readable across PRs:
+``PYTHONPATH=src python -m benchmarks.serving_throughput``.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import List, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import numpy as np
@@ -14,40 +25,105 @@ from repro.config import ModelConfig
 from repro.models.model import Model
 from repro.serving import Request, ServingEngine
 
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), 'BENCH_serving.json')
 
-def _engine_run(precompute: bool, n_layers: int = 4, n_req: int = 8,
-                new_tokens: int = 16) -> Tuple[float, float]:
+
+def _bench_model(n_layers: int = 4):
     cfg = ModelConfig(name='serve-bench', arch_class='dense',
                       num_layers=n_layers, d_model=256, num_heads=8,
                       num_kv_heads=4, head_dim=32, d_ff=1024,
                       vocab_size=2048, max_seq_len=256, dtype='float32')
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _engine_run(model, params, *, precompute: bool = False,
+                chunk_size: int = 1, n_req: int = 8, prompt_len: int = 6,
+                new_tokens: int = 16, max_seq: int = 128) -> Dict[str, float]:
     table = model.build_table(params) if precompute else None
-    eng = ServingEngine(model, params, max_slots=4, max_seq=128,
-                        precomputed=table)
-    reqs = [Request(uid=i, prompt=np.arange(5 + i % 3) + 3,
+    eng = ServingEngine(model, params, max_slots=4, max_seq=max_seq,
+                        precomputed=table, chunk_size=chunk_size)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(3, 2000,
+                                        size=max(1, prompt_len + i % 3 - 1)),
                     max_new_tokens=new_tokens) for i in range(n_req)]
-    # warmup jit
-    w = Request(uid=-1, prompt=np.arange(4) + 3, max_new_tokens=2)
+    # warmup jit (both the chunk and the single-token programs)
+    w = Request(uid=-1, prompt=np.arange(max(4, chunk_size + 1)) + 3,
+                max_new_tokens=2)
     eng.submit(w)
     eng.run()
+    steps0 = eng.steps                    # exclude jit-warmup steps
     t0 = time.perf_counter()
     for r in reqs:
         eng.submit(r)
     eng.run()
     dt = time.perf_counter() - t0
+    stats = eng.stats(reqs)
     toks = sum(len(r.generated) for r in reqs) + sum(len(r.prompt)
                                                      for r in reqs)
-    return dt / toks * 1e6, dt
+    return {
+        'total_s': dt,
+        'us_per_token': dt / toks * 1e6,
+        'mean_ttft_s': stats['mean_ttft_s'],
+        'engine_steps': eng.steps - steps0,
+        'completed': stats['completed'],
+    }
 
 
 def bench_serving() -> List[Tuple[str, float, str]]:
-    us_base, t_base = _engine_run(False)
-    us_pre, t_pre = _engine_run(True)
+    model, params = _bench_model()
+    base = _engine_run(model, params, precompute=False)
+    pre = _engine_run(model, params, precompute=True)
     return [
-        ('serving/baseline_us_per_token', us_base,
+        ('serving/baseline_us_per_token', base['us_per_token'],
          '4L d=256 continuous batching'),
-        ('serving/precompute_us_per_token', us_pre,
-         f'speedup={us_base / us_pre:.2f}x (first-layer gather)'),
+        ('serving/precompute_us_per_token', pre['us_per_token'],
+         f"speedup={base['us_per_token'] / pre['us_per_token']:.2f}x "
+         '(first-layer gather)'),
     ]
+
+
+def bench_serving_prompt_heavy(prompt_len: int = 96, new_tokens: int = 4,
+                               chunk_size: int = 32, n_req: int = 6,
+                               write_json: bool = True
+                               ) -> List[Tuple[str, float, str]]:
+    """Long prompts, short generations: TTFT, seed engine vs chunked."""
+    model, params = _bench_model()
+    kw = dict(n_req=n_req, prompt_len=prompt_len, new_tokens=new_tokens,
+              max_seq=256)
+    seed_eng = _engine_run(model, params, chunk_size=1, **kw)
+    chunked = _engine_run(model, params, chunk_size=chunk_size, **kw)
+    chunked_pre = _engine_run(model, params, chunk_size=chunk_size,
+                              precompute=True, **kw)
+    if write_json:
+        with open(BENCH_JSON, 'w') as f:
+            json.dump({
+                'workload': {'prompt_len': prompt_len,
+                             'new_tokens': new_tokens, 'n_req': n_req,
+                             'chunk_size': chunk_size,
+                             'model': '4L d=256 fp32 CPU'},
+                'seed_token_by_token': seed_eng,
+                'chunked': chunked,
+                'chunked_precomputed': chunked_pre,
+                'ttft_speedup': seed_eng['mean_ttft_s']
+                / max(chunked['mean_ttft_s'], 1e-9),
+            }, f, indent=2)
+    return [
+        ('serving/prompt_heavy_seed_ttft_us', seed_eng['mean_ttft_s'] * 1e6,
+         f'P={prompt_len} G={new_tokens} token-by-token'),
+        ('serving/prompt_heavy_chunked_ttft_us', chunked['mean_ttft_s'] * 1e6,
+         f"chunk={chunk_size} speedup="
+         f"{seed_eng['mean_ttft_s'] / max(chunked['mean_ttft_s'], 1e-9):.2f}x"),
+        ('serving/prompt_heavy_chunked_pre_ttft_us',
+         chunked_pre['mean_ttft_s'] * 1e6,
+         f'chunk={chunk_size} + precomputed table'),
+    ]
+
+
+if __name__ == '__main__':
+    for name, us, derived in bench_serving_prompt_heavy():
+        print(f'{name},{us:.2f},{derived}')
+    print(f'wrote {BENCH_JSON}')

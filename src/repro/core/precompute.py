@@ -18,6 +18,12 @@ that is the enabling condition (RoPE is applied after the projections).
 
 This is done once, offline (`build_precomputed_table`), and the table is
 stored with the parameters — exactly the paper's §1 procedure.
+
+Serving-time note: during chunked prefill the per-token row gather becomes a
+multi-row gather per chunk, and ``kernels/gather_rope.py`` provides a fused
+Pallas kernel that applies layer-0 RoPE to the q/k slices inside the same
+VMEM pass as the gather (opt-in via ``ServingEngine(fused_gather_rope=True)``)
+— the rows go gather→RoPE→attention without an HBM round-trip.
 """
 from __future__ import annotations
 

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: fused precomputed-row gather + layer-0 RoPE.
+
+The paper turns layer 0 into one table-row read per token; at serve time the
+q/k slices of that row are immediately rotated by RoPE before attention. This
+kernel fuses the two: the row is DMA'd HBM->VMEM via scalar-prefetched token
+ids (as in ``embed_gather.py``) and the rotation happens in the same VMEM
+pass — the rows never round-trip through HBM between gather and RoPE.
+
+Token ids AND positions arrive via ``PrefetchScalarGridSpec`` so the row DMA
+for step ``i`` can be issued before its body runs; the position is only
+needed inside the body (sin/cos angles), never for addressing.
+
+Grid: one step per token. The rotated segments are described statically by
+``segs = ((offset, n_heads, head_dim), ...)`` in row-storage order —
+(q_offset, H, hd) and (k_offset, KV, hd) for the standard ``[x|s, q, k, v]``
+layout. RoPE uses the half-split (llama) convention, matching
+``models.layers.apply_rope``. The row width must be 128-lane padded (the
+ops.py wrapper handles it); segment offsets need no alignment because the
+output row is assembled in VMEM and stored once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_rope_kernel(ids_ref, pos_ref, table_ref, out_ref, *, segs, theta):
+    i = pl.program_id(0)
+    pos = pos_ref[i].astype(jnp.float32)
+    row = table_ref[...]                       # (1, Wp) — the gathered row
+    pieces = []
+    cur = 0
+    for off, heads, hd in segs:
+        if off > cur:
+            pieces.append(row[:, cur:off])
+        half = hd // 2
+        seg = row[0, off:off + heads * hd].reshape(heads, hd) \
+            .astype(jnp.float32)
+        # inverse frequencies: 1 / theta^(2j/hd), j = 0..hd/2-1 (2D iota —
+        # TPU requires >= 2 dims)
+        expo = jax.lax.broadcasted_iota(jnp.float32, (1, half), 1) * (2.0 / hd)
+        inv = 1.0 / (theta ** expo)
+        ang = pos * inv                        # (1, half)
+        sin, cos = jnp.sin(ang), jnp.cos(ang)
+        x1, x2 = seg[:, :half], seg[:, half:]
+        rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                              axis=-1)
+        pieces.append(rot.reshape(1, heads * hd).astype(row.dtype))
+        cur = off + heads * hd
+    if cur < row.shape[1]:
+        pieces.append(row[:, cur:])
+    out_ref[...] = jnp.concatenate(pieces, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=('segs', 'theta', 'interpret'))
+def gather_rope(table: jax.Array, ids: jax.Array, positions: jax.Array, *,
+                segs, theta: float, interpret: bool = True) -> jax.Array:
+    """table (V, W), ids (N,) int32, positions (N,) int32 -> rows (N, W)
+    with each ``segs`` slice RoPE-rotated for its token's position. W must be
+    128-aligned (use ops.gather_rope_rows for the padding wrapper)."""
+    V, W = table.shape
+    N = ids.shape[0]
+    segs = tuple(sorted(segs))
+    for off, heads, hd in segs:
+        assert hd % 2 == 0 and off + heads * hd <= W
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                 # ids, positions
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((1, W), lambda i, ids_ref, pos_ref: (ids_ref[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, W), lambda i, ids_ref, pos_ref: (i, 0)),
+    )
+    kernel = functools.partial(_gather_rope_kernel, segs=segs,
+                               theta=float(theta))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, W), table.dtype),
+        interpret=interpret,
+    )(ids, positions, table)

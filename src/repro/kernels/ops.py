@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.embed_gather import embed_gather
+from repro.kernels.gather_rope import gather_rope
 from repro.kernels.rmsnorm_qkv import rmsnorm_matmul
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.decode_attention import decode_attention
@@ -39,6 +40,26 @@ def embed_gather_rows(table: jax.Array, ids: jax.Array) -> jax.Array:
     tp = _pad_to(table, 128, axis=1)
     flat = ids.reshape(-1).astype(jnp.int32)
     rows = embed_gather(tp, flat, interpret=_interpret())
+    return rows[:, :W].reshape(*ids.shape, W)
+
+
+def gather_rope_rows(table: jax.Array, ids: jax.Array, positions: jax.Array,
+                     *, q_off: int, num_heads: int, k_off: int,
+                     num_kv_heads: int, head_dim: int,
+                     theta: float) -> jax.Array:
+    """Fused precomputed-row gather + layer-0 RoPE on the q/k slices.
+
+    Any (V, W) table, any matching ids/positions shape -> (*ids, W) rows
+    whose q and k segments are already rotated for each token's position —
+    the chunked-prefill serving fast path's first read.
+    """
+    W = table.shape[1]
+    tp = _pad_to(table, 128, axis=1)
+    flat_ids = ids.reshape(-1).astype(jnp.int32)
+    flat_pos = positions.reshape(-1).astype(jnp.int32)
+    segs = ((q_off, num_heads, head_dim), (k_off, num_kv_heads, head_dim))
+    rows = gather_rope(tp, flat_ids, flat_pos, segs=segs, theta=float(theta),
+                       interpret=_interpret())
     return rows[:, :W].reshape(*ids.shape, W)
 
 

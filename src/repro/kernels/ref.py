@@ -16,6 +16,30 @@ def embed_gather_ref(table: jax.Array, ids: jax.Array) -> jax.Array:
     return jnp.take(table, ids, axis=0)
 
 
+def gather_rope_ref(table: jax.Array, ids: jax.Array, positions: jax.Array,
+                    *, segs, theta: float) -> jax.Array:
+    """Fused gather + RoPE: (V, W), (N,), (N,) -> (N, W) with each
+    ``(offset, n_heads, head_dim)`` segment of ``segs`` rotated (half-split
+    convention, fp32 trig) for its token's position.
+    """
+    rows = jnp.take(table, ids, axis=0)
+    N, W = rows.shape
+    out = rows
+    for off, heads, hd in segs:
+        half = hd // 2
+        seg = rows[:, off:off + heads * hd].reshape(N, heads, hd) \
+            .astype(jnp.float32)
+        inv = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+        ang = positions.astype(jnp.float32)[:, None] * inv        # (N, half)
+        sin = jnp.sin(ang)[:, None, :]
+        cos = jnp.cos(ang)[:, None, :]
+        x1, x2 = seg[..., :half], seg[..., half:]
+        rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                              axis=-1).reshape(N, heads * hd)
+        out = out.at[:, off:off + heads * hd].set(rot.astype(table.dtype))
+    return out
+
+
 def rmsnorm_qkv_ref(x: jax.Array, scale: jax.Array, wq: jax.Array,
                     wk: jax.Array, wv: jax.Array, *, eps: float = 1e-6
                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:

@@ -26,6 +26,12 @@ def main() -> None:
     ap.add_argument('--max-seq', type=int, default=256)
     ap.add_argument('--temperature', type=float, default=0.0)
     ap.add_argument('--no-precompute', action='store_true')
+    ap.add_argument('--chunk-size', type=int, default=16,
+                    help='prompt tokens per prefill dispatch (1 = token-by-'
+                         'token; auto-falls back for recurrent/hybrid/MLA)')
+    ap.add_argument('--fused-gather-rope', action='store_true',
+                    help='fold layer-0 RoPE into the precomputed-row gather '
+                         '(Pallas kernel; needs precompute + chunking)')
     ap.add_argument('--seed', type=int, default=0)
     args = ap.parse_args()
 
@@ -43,7 +49,11 @@ def main() -> None:
               f'MiB) built in {time.time() - t0:.2f}s')
     eng = ServingEngine(model, params, max_slots=args.slots,
                         max_seq=args.max_seq, precomputed=table,
-                        seed=args.seed)
+                        seed=args.seed, chunk_size=args.chunk_size,
+                        fused_gather_rope=args.fused_gather_rope)
+    if eng.chunk_size > 1:
+        print(f'chunked prefill: {eng.chunk_size} tokens/dispatch'
+              + (' + fused gather→RoPE' if eng.fused_gather_rope else ''))
     rng = np.random.default_rng(args.seed)
     reqs = [Request(uid=i,
                     prompt=rng.integers(3, cfg.vocab_size,

@@ -242,16 +242,27 @@ def cross_attention_core(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 # ================================================================== KV cache
-def cache_len(window: int, seq_len: int) -> int:
-    return min(window, seq_len) if window else seq_len
+def cache_len(window: int, seq_len: int, chunk: int = 1) -> int:
+    """Ring length for a sliding-window cache.
+
+    ``chunk`` > 1 reserves slack for chunked prefill: a T-token chunk is
+    written *before* its queries attend, so without ``chunk - 1`` extra ring
+    slots a late in-chunk write could evict a key still inside an early
+    in-chunk query's window. Entries older than ``window`` stay masked out by
+    ``decode_attend``'s validity test, so outputs are unchanged — only the
+    ring is deeper.
+    """
+    if not window:
+        return seq_len
+    return min(window + max(0, chunk - 1), seq_len)
 
 
 def make_cache(cfg: ModelConfig, batch: int, seq_len: int, *, window: int = 0,
-               dtype=jnp.bfloat16, quant: bool = False
+               dtype=jnp.bfloat16, quant: bool = False, chunk: int = 1
                ) -> Dict[str, jax.Array]:
     """KV cache. ``quant=True``: int8 entries + per-(token, head) bf16 scales
     — halves decode's dominant HBM-read term (§Perf hillclimb-3)."""
-    Sc = cache_len(window, seq_len)
+    Sc = cache_len(window, seq_len, chunk)
     KV, hd = cfg.num_kv_heads, cfg.head_dim
     cache = {
         'k': jnp.zeros((batch, Sc, KV, hd), jnp.int8 if quant else dtype),
@@ -265,10 +276,11 @@ def make_cache(cfg: ModelConfig, batch: int, seq_len: int, *, window: int = 0,
 
 
 def cache_abstract(cfg: ModelConfig, batch: int, seq_len: int, rules, *,
-                   window: int = 0, dtype=jnp.bfloat16, quant: bool = False):
+                   window: int = 0, dtype=jnp.bfloat16, quant: bool = False,
+                   chunk: int = 1):
     """ShapeDtypeStructs (with shardings) for the dry-run decode inputs."""
     from repro.sharding import logical_sds
-    Sc = cache_len(window, seq_len)
+    Sc = cache_len(window, seq_len, chunk)
     KV, hd = cfg.num_kv_heads, cfg.head_dim
     kv_dt = jnp.int8 if quant else dtype
     out = {
@@ -317,6 +329,48 @@ def cache_update(cache: Dict, k_new: jax.Array, v_new: jax.Array,
     return out
 
 
+def cache_update_chunk(cache: Dict, k_new: jax.Array, v_new: jax.Array,
+                       pos0: jax.Array, n_valid: jax.Array) -> Dict:
+    """Write a whole chunk (B,T,KV,hd) at ring indices ``(pos0 + t) % Sc``,
+    masked to ``t < n_valid`` per slot — one call instead of T scatters.
+
+    Formulated as a *gather*: for every ring slot we compute the unique chunk
+    index that lands on it last (ring laps inside one chunk resolve to the
+    final write), then select chunk-vs-old per slot. Deterministic where a
+    scatter with duplicate indices would not be, and bit-identical to T
+    sequential :func:`cache_update` calls.
+    """
+    B, T = k_new.shape[:2]
+    Sc = cache['k'].shape[1]
+    pos0 = pos0.astype(jnp.int32)
+    n_valid = n_valid.astype(jnp.int32)
+    slots = jnp.arange(Sc, dtype=jnp.int32)[None]            # (1,Sc)
+    last = pos0[:, None] + n_valid[:, None] - 1              # last valid pos
+    # unique t in [n_valid - Sc, n_valid) with (pos0 + t) % Sc == slot:
+    t = n_valid[:, None] - 1 - ((last - slots) % Sc)         # (B,Sc)
+    hit = t >= 0                                             # n_valid==0 -> none
+    tc = jnp.clip(t, 0, T - 1)
+
+    def sel(new, old):
+        shp = (B, Sc) + (1,) * (new.ndim - 2)
+        g = jnp.take_along_axis(new, tc.reshape(shp), axis=1)
+        return jnp.where(hit.reshape(shp), g.astype(old.dtype), old)
+
+    out = dict(cache)
+    if 'k_scale' in cache:
+        kq, ks = _quantize(k_new)
+        vq, vs = _quantize(v_new)
+        out['k'] = sel(kq, cache['k'])
+        out['v'] = sel(vq, cache['v'])
+        out['k_scale'] = sel(ks, cache['k_scale'])
+        out['v_scale'] = sel(vs, cache['v_scale'])
+    else:
+        out['k'] = sel(k_new, cache['k'])
+        out['v'] = sel(v_new, cache['v'])
+    out['pos'] = jnp.where(hit, pos0[:, None] + tc, cache['pos'])
+    return out
+
+
 # ================================================================ decode core
 def decode_attend(q: jax.Array, cache: Dict, pos: jax.Array, cfg: ModelConfig,
                   *, rope_theta, window: int = 0) -> jax.Array:
@@ -325,38 +379,11 @@ def decode_attend(q: jax.Array, cache: Dict, pos: jax.Array, cfg: ModelConfig,
     q: (B,1,q_size) PRE-RoPE flat; pos: (B,) current positions.
     Entry validity comes from the cache's stored positions, which makes the
     ring buffer correct without tracking wrap-arounds explicitly.
+    The T=1 case of :func:`decode_attend_chunk` — one shared implementation
+    of the validity mask / int8-scale folding / fp32 softmax.
     """
-    B = q.shape[0]
-    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    q = q.reshape(B, 1, H, hd)
-    if cfg.pos == 'rope':
-        q = L.apply_rope(q, pos[:, None], rope_theta)
-    q = q.reshape(B, KV, H // KV, hd)
-    if 'k_scale' in cache:
-        # int8 cache: contract against raw int8 values, fold the per-token
-        # scale into the scores afterwards (reads stay 1 byte/element)
-        scores = jnp.einsum('bkgd,bskd->bkgs', q.astype(jnp.float32),
-                            cache['k'].astype(jnp.float32))
-        scores = scores * cache['k_scale'].astype(jnp.float32) \
-            .transpose(0, 2, 1)[:, :, None, :] * hd ** -0.5
-    else:
-        scores = jnp.einsum('bkgd,bskd->bkgs', q.astype(jnp.float32),
-                            cache['k'].astype(jnp.float32)) * hd ** -0.5
-    cp = cache['pos'][:, None, None, :]                      # (B,1,1,Sc)
-    valid = (cp >= 0) & (cp <= pos[:, None, None, None])
-    if window:
-        valid &= (pos[:, None, None, None] - cp) < window
-    scores = jnp.where(valid, scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1)
-    if 'k_scale' in cache:
-        pv = probs * cache['v_scale'].astype(jnp.float32) \
-            .transpose(0, 2, 1)[:, :, None, :]
-        ctx = jnp.einsum('bkgs,bskd->bkgd', pv,
-                         cache['v'].astype(jnp.float32)).astype(q.dtype)
-    else:
-        ctx = jnp.einsum('bkgs,bskd->bkgd', probs.astype(cache['v'].dtype),
-                         cache['v'])
-    return ctx.reshape(B, 1, H * hd)
+    return decode_attend_chunk(q, cache, pos, cfg, rope_theta=rope_theta,
+                               window=window)
 
 
 def decode_step(params, x_normed: jax.Array, cache: Dict, pos: jax.Array,
@@ -378,6 +405,77 @@ def decode_step(params, x_normed: jax.Array, cache: Dict, pos: jax.Array,
     cache = cache_update(cache, k_h, v_h, pos)
     ctx = decode_attend(q, cache, pos, cfg, rope_theta=rope_theta,
                         window=window)
+    return L.dense(params['wo'], ctx), cache
+
+
+def decode_attend_chunk(q: jax.Array, cache: Dict, pos0: jax.Array,
+                        cfg: ModelConfig, *, rope_theta, window: int = 0,
+                        rope_applied: bool = False) -> jax.Array:
+    """T-query attention against the (already chunk-updated) cache.
+
+    q: (B,T,q_size) flat; query t sits at position ``pos0 + t``. In-chunk
+    causality needs no extra mask: the chunk's own keys are in the cache with
+    their positions, and the ``stored_pos <= query_pos`` validity test hides
+    the not-yet-seen ones. ``rope_applied`` skips the q rotation for rows
+    coming from the fused gather→RoPE kernel.
+    """
+    B, T = q.shape[0], q.shape[1]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = q.reshape(B, T, H, hd)
+    pos_t = pos0[:, None].astype(jnp.int32) + jnp.arange(T, dtype=jnp.int32)
+    if cfg.pos == 'rope' and not rope_applied:
+        q = L.apply_rope(q, pos_t, rope_theta)
+    q = q.reshape(B, T, KV, H // KV, hd)
+    if 'k_scale' in cache:
+        scores = jnp.einsum('btkgd,bskd->bkgts', q.astype(jnp.float32),
+                            cache['k'].astype(jnp.float32))
+        scores = scores * cache['k_scale'].astype(jnp.float32) \
+            .transpose(0, 2, 1)[:, :, None, None, :] * hd ** -0.5
+    else:
+        scores = jnp.einsum('btkgd,bskd->bkgts', q.astype(jnp.float32),
+                            cache['k'].astype(jnp.float32)) * hd ** -0.5
+    cp = cache['pos'][:, None, None, None, :]                # (B,1,1,1,Sc)
+    qp = pos_t[:, None, None, :, None]                       # (B,1,1,T,1)
+    valid = (cp >= 0) & (cp <= qp)
+    if window:
+        valid &= (qp - cp) < window
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    if 'k_scale' in cache:
+        pv = probs * cache['v_scale'].astype(jnp.float32) \
+            .transpose(0, 2, 1)[:, :, None, None, :]
+        ctx = jnp.einsum('bkgts,bskd->btkgd', pv,
+                         cache['v'].astype(jnp.float32)).astype(q.dtype)
+    else:
+        ctx = jnp.einsum('bkgts,bskd->btkgd', probs.astype(cache['v'].dtype),
+                         cache['v'])
+    return ctx.reshape(B, T, H * hd)
+
+
+def decode_chunk(params, x_normed: Optional[jax.Array], cache: Dict,
+                 pos0: jax.Array, n_valid: jax.Array, cfg: ModelConfig, *,
+                 rope_theta, window: int = 0, qkv: Optional[Tuple] = None,
+                 rope_applied: bool = False) -> Tuple[jax.Array, Dict]:
+    """Chunked-prefill step: project (or take precomputed) a T-token chunk,
+    write the valid prefix into the cache in one call, attend all T queries.
+
+    ``qkv`` supplies gathered (q,k,v) rows (B,T,·) for the paper's layer-0
+    path; ``rope_applied`` marks them as already rotated by the fused kernel.
+    """
+    if qkv is None:
+        q, k, v = compute_qkv(params, x_normed, cfg)
+    else:
+        q, k, v = qkv
+    B, T = q.shape[0], q.shape[1]
+    k_h = k.reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.pos == 'rope' and not rope_applied:
+        pos_t = pos0[:, None].astype(jnp.int32) \
+            + jnp.arange(T, dtype=jnp.int32)
+        k_h = L.apply_rope(k_h, pos_t, rope_theta)
+    v_h = v.reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    cache = cache_update_chunk(cache, k_h, v_h, pos0, n_valid)
+    ctx = decode_attend_chunk(q, cache, pos0, cfg, rope_theta=rope_theta,
+                              window=window, rope_applied=rope_applied)
     return L.dense(params['wo'], ctx), cache
 
 

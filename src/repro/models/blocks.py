@@ -253,13 +253,14 @@ def block_apply_full(params, h: jax.Array, positions: jax.Array,
 
 # ===================================================================== state
 def block_make_state(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
-                     dtype=jnp.bfloat16, quant: bool = False) -> Dict:
+                     dtype=jnp.bfloat16, quant: bool = False,
+                     chunk: int = 1) -> Dict:
     if kind in ATTN_KINDS:
         if cfg.mla:
             return M.mla_make_cache(cfg, batch, seq_len, dtype)
         return A.make_cache(cfg, batch, seq_len,
                             window=kind_window(cfg, kind), dtype=dtype,
-                            quant=quant)
+                            quant=quant, chunk=chunk)
     if kind in HYBRID_KINDS:
         return {'attn': A.make_cache(cfg, batch, seq_len,
                                      window=kind_window(cfg, kind),
@@ -273,7 +274,8 @@ def block_make_state(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
 
 
 def block_state_abstract(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
-                         rules, dtype=jnp.bfloat16, quant: bool = False):
+                         rules, dtype=jnp.bfloat16, quant: bool = False,
+                         chunk: int = 1):
     """ShapeDtypeStruct version of block_make_state for the dry-run."""
     from repro.sharding import logical_sds
 
@@ -288,7 +290,7 @@ def block_state_abstract(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
             return M.mla_cache_abstract(cfg, batch, seq_len, rules, dtype)
         return A.cache_abstract(cfg, batch, seq_len, rules,
                                 window=kind_window(cfg, kind), dtype=dtype,
-                                quant=quant)
+                                quant=quant, chunk=chunk)
     if kind in HYBRID_KINDS:
         ssm_st = jax.eval_shape(lambda: S.mamba_init_state(cfg, batch))
         return {'attn': A.cache_abstract(cfg, batch, seq_len, rules,
@@ -307,24 +309,42 @@ def block_state_abstract(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
 # ==================================================================== decode
 def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
                  cfg: ModelConfig, kind: str, use_moe: bool, *,
-                 pre: Optional[Dict] = None
+                 pre: Optional[Dict] = None,
+                 n_valid: Optional[jax.Array] = None,
+                 rope_applied: bool = False
                  ) -> Tuple[jax.Array, Dict]:
-    """One-token step. h: (B,1,d); pos: (B,). -> (h_out, new_state)."""
+    """Decode step. h: (B,T,d); pos: (B,) start positions. -> (h_out, state).
+
+    ``n_valid is None`` is the classic one-token step (T == 1). Passing
+    ``n_valid`` (B,) switches attention kinds to the chunked-prefill path:
+    the whole T-token chunk is projected at once, the valid prefix written
+    to the cache in one call, and all T queries attended together. Norms and
+    FFN/MoE are token-wise, so the surrounding code is shared. Only
+    attention kinds support T > 1 (see transformer.supports_chunked_decode).
+    """
     theta = kind_theta(cfg, kind)
     window = kind_window(cfg, kind)
+    chunked = n_valid is not None
+    if chunked and (kind not in ATTN_KINDS or cfg.mla):
+        raise NotImplementedError(
+            f'chunked decode not supported for kind={kind!r} (mla={bool(cfg.mla)})')
+
+    def attend(xn, qkv):
+        if chunked:
+            return A.decode_chunk(params['attn'], xn, state, pos, n_valid,
+                                  cfg, rope_theta=theta, window=window,
+                                  qkv=qkv, rope_applied=rope_applied)
+        return A.decode_step(params['attn'], xn, state, pos, cfg,
+                             rope_theta=theta, window=window, qkv=qkv)
 
     if kind in ATTN_KINDS:
         if cfg.block_type == 'parallel':
             if pre is not None:
                 s, qkv = pre['s'], (pre['q'], pre['k'], pre['v'])
-                attn_out, state = A.decode_step(params['attn'], None, state,
-                                                pos, cfg, rope_theta=theta,
-                                                window=window, qkv=qkv)
+                attn_out, state = attend(None, qkv)
                 return s + attn_out, state
             xn = L.norm_apply(params['ln1'], h, cfg.norm)
-            attn_out, state = A.decode_step(params['attn'], xn, state, pos,
-                                            cfg, rope_theta=theta,
-                                            window=window)
+            attn_out, state = attend(xn, None)
             xn2 = L.norm_apply(params['ln2'], h, cfg.norm)
             if use_moe:
                 f, _ = moe_apply(params['moe'], xn2, cfg)
@@ -338,18 +358,14 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
                     params['attn'], None, state, pos, cfg, rope_theta=theta,
                     latents=(pre['q'], pre['ckv'], pre['kpe']))
             else:
-                attn_out, state = A.decode_step(
-                    params['attn'], None, state, pos, cfg, rope_theta=theta,
-                    window=window, qkv=(pre['q'], pre['k'], pre['v']))
+                attn_out, state = attend(None, (pre['q'], pre['k'], pre['v']))
         else:
             xn = L.norm_apply(params['ln1'], h, cfg.norm)
             if cfg.mla:
                 attn_out, state = M.mla_decode_step(params['attn'], xn, state,
                                                     pos, cfg, rope_theta=theta)
             else:
-                attn_out, state = A.decode_step(params['attn'], xn, state,
-                                                pos, cfg, rope_theta=theta,
-                                                window=window)
+                attn_out, state = attend(xn, None)
         h = h + attn_out
         xn2 = L.norm_apply(params['ln2'], h, cfg.norm)
         if use_moe:

@@ -78,29 +78,45 @@ class Model:
         return T.lm_head(params, h_normed, self.cfg)
 
     def decode_step(self, params, tokens: jax.Array, states, pos: jax.Array,
-                    *, precomputed=None, rules=None):
+                    *, precomputed=None, rules=None, n_valid=None,
+                    return_hidden: bool = False,
+                    fused_gather_rope: bool = False):
+        """tokens (B,T), pos (B,) -> (logits (B,T,V), new states).
+
+        T == 1 with ``n_valid=None`` is the classic decode step. Passing
+        ``n_valid`` (B,) runs the chunked-prefill fast path (see
+        transformer.lm_decode_step); gate on :meth:`supports_chunked_decode`.
+        """
         c = self.cfg
         if c.arch_class == 'audio':
+            assert n_valid is None, 'audio decode is one token per step'
             return E.encdec_decode_step(params, tokens, states, pos, c,
                                         precomputed=precomputed)
         return T.lm_decode_step(params, tokens, states, pos, c,
-                                precomputed=precomputed, rules=rules)
+                                precomputed=precomputed, rules=rules,
+                                n_valid=n_valid, return_hidden=return_hidden,
+                                fused_gather_rope=fused_gather_rope)
+
+    def supports_chunked_decode(self) -> bool:
+        return T.supports_chunked_decode(self.cfg)
 
     # ------------------------------------------------------------- states
     def make_states(self, batch: int, seq_len: int, dtype=jnp.bfloat16,
-                    kv_quant: bool = False):
+                    kv_quant: bool = False, chunk: int = 1):
         c = self.cfg
         if c.arch_class == 'audio':
             return E.encdec_make_states(c, batch, seq_len, dtype)
-        return T.backbone_make_states(c, batch, seq_len, dtype, kv_quant)
+        return T.backbone_make_states(c, batch, seq_len, dtype, kv_quant,
+                                      chunk)
 
     def states_abstract(self, batch: int, seq_len: int, rules: Rules,
-                        dtype=jnp.bfloat16, kv_quant: bool = False):
+                        dtype=jnp.bfloat16, kv_quant: bool = False,
+                        chunk: int = 1):
         c = self.cfg
         if c.arch_class == 'audio':
             return E.encdec_states_abstract(c, batch, seq_len, rules, dtype)
         return T.backbone_states_abstract(c, batch, seq_len, rules, dtype,
-                                          kv_quant)
+                                          kv_quant, chunk)
 
     # ------------------------------------------------- the paper's feature
     def build_table(self, params) -> PC.PrecomputedTable:

@@ -254,32 +254,33 @@ def lm_apply(params, tokens: jax.Array, cfg: ModelConfig, *,
 
 # ==================================================================== decode
 def backbone_make_states(cfg: ModelConfig, batch: int, seq_len: int,
-                         dtype=jnp.bfloat16, quant: bool = False) -> Dict:
+                         dtype=jnp.bfloat16, quant: bool = False,
+                         chunk: int = 1) -> Dict:
     plan = layer_plan(cfg)
     st: Dict[str, Any] = {
         'layer0': block_make_state(cfg, plan.kinds[0], batch, seq_len, dtype,
-                                   quant)}
+                                   quant, chunk)}
     if plan.n_head:
         st['head'] = [block_make_state(cfg, plan.kinds[1 + i], batch, seq_len,
-                                       dtype, quant)
+                                       dtype, quant, chunk)
                       for i in range(plan.n_head)]
     if plan.reps:
         st['body'] = [
             jax.tree_util.tree_map(
                 lambda x: jnp.broadcast_to(x[None], (plan.reps,) + x.shape)
                 .copy() if hasattr(x, 'shape') else x,
-                block_make_state(cfg, k, batch, seq_len, dtype, quant))
+                block_make_state(cfg, k, batch, seq_len, dtype, quant, chunk))
             for k in plan.slots]
     if plan.n_tail:
         st['tail'] = [block_make_state(cfg, plan.slots[i], batch, seq_len,
-                                       dtype, quant)
+                                       dtype, quant, chunk)
                       for i in range(plan.n_tail)]
     return st
 
 
 def backbone_states_abstract(cfg: ModelConfig, batch: int, seq_len: int,
                              rules, dtype=jnp.bfloat16,
-                             quant: bool = False) -> Dict:
+                             quant: bool = False, chunk: int = 1) -> Dict:
     plan = layer_plan(cfg)
 
     def stack_sds(sds_tree, n):
@@ -296,36 +297,45 @@ def backbone_states_abstract(cfg: ModelConfig, batch: int, seq_len: int,
 
     st: Dict[str, Any] = {
         'layer0': block_state_abstract(cfg, plan.kinds[0], batch, seq_len,
-                                       rules, dtype, quant)}
+                                       rules, dtype, quant, chunk)}
     if plan.n_head:
         st['head'] = [block_state_abstract(cfg, plan.kinds[1 + i], batch,
-                                           seq_len, rules, dtype, quant)
+                                           seq_len, rules, dtype, quant,
+                                           chunk)
                       for i in range(plan.n_head)]
     if plan.reps:
         st['body'] = [stack_sds(block_state_abstract(cfg, k, batch, seq_len,
-                                                     rules, dtype, quant),
+                                                     rules, dtype, quant,
+                                                     chunk),
                                 plan.reps)
                       for k in plan.slots]
     if plan.n_tail:
         st['tail'] = [block_state_abstract(cfg, plan.slots[i], batch, seq_len,
-                                           rules, dtype, quant)
+                                           rules, dtype, quant, chunk)
                       for i in range(plan.n_tail)]
     return st
 
 
 def backbone_decode(params, h: jax.Array, states: Dict, pos: jax.Array,
                     cfg: ModelConfig, *, pre0: Optional[Dict] = None,
-                    rules=None) -> Tuple[jax.Array, Dict]:
+                    rules=None, n_valid: Optional[jax.Array] = None,
+                    rope_applied: bool = False) -> Tuple[jax.Array, Dict]:
+    """``n_valid is None``: classic one-token step (h is (B,1,d)).
+    With ``n_valid`` (B,): chunked step — h is (B,T,d), every layer writes
+    its chunk of K/V in one call (attention kinds only).
+    """
     plan = layer_plan(cfg)
     new_states: Dict[str, Any] = {}
     h, st = block_decode(params['layer0'], h, states['layer0'], pos, cfg,
-                         plan.kinds[0], plan.use_moe[0], pre=pre0)
+                         plan.kinds[0], plan.use_moe[0], pre=pre0,
+                         n_valid=n_valid, rope_applied=rope_applied)
     new_states['layer0'] = st
     if plan.n_head:
         new_states['head'] = []
         for i in range(plan.n_head):
             h, st = block_decode(params['head'][i], h, states['head'][i], pos,
-                                 cfg, plan.kinds[1 + i], plan.use_moe[1 + i])
+                                 cfg, plan.kinds[1 + i], plan.use_moe[1 + i],
+                                 n_valid=n_valid)
             new_states['head'].append(st)
     if plan.reps:
         body_moe = plan.use_moe[1 + plan.n_head]
@@ -337,7 +347,7 @@ def backbone_decode(params, h: jax.Array, states: Dict, pos: jax.Array,
             for s, kind in enumerate(plan.slots):
                 prm_s = _constrain_params(prm[s], slot_shardings[s])
                 hh, st_s = block_decode(prm_s, hh, sts[s], pos, cfg, kind,
-                                        body_moe)
+                                        body_moe, n_valid=n_valid)
                 outs.append(st_s)
             return hh, tuple(outs)
 
@@ -348,7 +358,8 @@ def backbone_decode(params, h: jax.Array, states: Dict, pos: jax.Array,
         new_states['tail'] = []
         for i in range(plan.n_tail):
             h, st = block_decode(params['tail'][i], h, states['tail'][i], pos,
-                                 cfg, plan.slots[i], plan.use_moe[-1])
+                                 cfg, plan.slots[i], plan.use_moe[-1],
+                                 n_valid=n_valid)
             new_states['tail'].append(st)
     return h, new_states
 
@@ -368,22 +379,90 @@ def prime_meta_states(params, states: Dict, cfg: ModelConfig,
     return states
 
 
+def supports_chunked_decode(cfg: ModelConfig) -> bool:
+    """Chunked (T>1) decode covers the attention families; recurrent /
+    hybrid / MLA layers still step token-by-token."""
+    if cfg.arch_class == 'audio':
+        return False
+    from repro.models.blocks import ATTN_KINDS
+    plan = layer_plan(cfg)
+    return all(k in ATTN_KINDS for k in plan.kinds) and not cfg.mla
+
+
 def lm_decode_step(params, tokens: jax.Array, states: Dict, pos: jax.Array,
-                   cfg: ModelConfig, *, precomputed=None, rules=None
+                   cfg: ModelConfig, *, precomputed=None, rules=None,
+                   n_valid: Optional[jax.Array] = None,
+                   return_hidden: bool = False,
+                   fused_gather_rope: bool = False
                    ) -> Tuple[jax.Array, Dict]:
-    """tokens (B,1), pos (B,) -> (logits (B,1,V), new states).
+    """tokens (B,T), pos (B,) -> (logits (B,T,V), new states).
+
+    ``n_valid is None`` is the classic one-token step (T == 1). With
+    ``n_valid`` (B,) the whole T-token chunk advances in one call: slot b's
+    tokens sit at positions ``pos[b] .. pos[b] + n_valid[b] - 1``; lanes
+    beyond ``n_valid`` are padding (computed but never written to the cache,
+    their logits are garbage).
 
     With ``precomputed``, the embedding read + layer-0 projections collapse to
-    one row gather — the paper's decode-time win.
+    one row gather — the paper's decode-time win, amortised over the chunk.
+    ``fused_gather_rope`` additionally folds layer-0 RoPE into that gather via
+    the Pallas kernel (kernels/gather_rope.py); it requires a q/k layout
+    (dense non-MLA) and rope positions.
+
+    ``return_hidden`` skips final-norm + lm_head and returns the raw hidden
+    states — the serving engine selects each slot's last valid lane first and
+    runs the head on (B,1,d) instead of (B,T,V).
     """
-    if precomputed is not None:
-        pre0 = precomputed.gather(tokens)
-        h = pre0['s'] if 's' in pre0 else pre0['x']
+    rope_applied = False
+    if n_valid is None:
+        if precomputed is not None:
+            pre0 = precomputed.gather(tokens)
+            h = pre0['s'] if 's' in pre0 else pre0['x']
+        else:
+            pre0 = None
+            h = embed_tokens(params, tokens, cfg,
+                             positions=pos[:, None] if cfg.pos == 'learned'
+                             else None)
     else:
-        pre0 = None
-        h = embed_tokens(params, tokens, cfg,
-                         positions=pos[:, None] if cfg.pos == 'learned'
-                         else None)
+        T = tokens.shape[1]
+        pos_t = pos[:, None].astype(jnp.int32) + jnp.arange(T, dtype=jnp.int32)
+        if precomputed is not None:
+            if fused_gather_rope:
+                pre0 = _fused_gather_rope_pre0(precomputed, tokens, pos_t, cfg)
+                rope_applied = True
+            else:
+                pre0 = precomputed.gather(tokens)
+            h = pre0['s'] if 's' in pre0 else pre0['x']
+        else:
+            pre0 = None
+            h = embed_tokens(params, tokens, cfg,
+                             positions=pos_t if cfg.pos == 'learned' else None)
     h, states = backbone_decode(params['backbone'], h, states, pos, cfg,
-                                pre0=pre0, rules=rules)
+                                pre0=pre0, rules=rules, n_valid=n_valid,
+                                rope_applied=rope_applied)
+    if return_hidden:
+        return h, states
     return lm_logits(params, h, cfg), states
+
+
+def _fused_gather_rope_pre0(precomputed, tokens: jax.Array, pos_t: jax.Array,
+                            cfg: ModelConfig) -> Dict[str, jax.Array]:
+    """Layer-0 rows via the fused gather→RoPE kernel: one table read per
+    token with the q/k slices already rotated for their positions."""
+    from repro.kernels import ops
+    from repro.models.blocks import kind_theta
+    plan = layer_plan(cfg)
+    names = [nm for nm, _ in precomputed.layout]
+    assert 'q' in names and 'k' in names, \
+        'fused gather→RoPE needs a flat q/k row layout'
+    assert cfg.pos == 'rope'
+    offs, off = {}, 0
+    for nm, w in precomputed.layout:
+        offs[nm] = off
+        off += w
+    rows = ops.gather_rope_rows(
+        precomputed.table, tokens, pos_t,
+        q_off=offs['q'], num_heads=cfg.num_heads,
+        k_off=offs['k'], num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.head_dim, theta=kind_theta(cfg, plan.kinds[0]))
+    return precomputed.split(rows)

@@ -1,17 +1,29 @@
-"""Batched serving engine with token-level continuous batching (Orca-style).
+"""Batched serving engine: continuous batching with chunked prefill.
 
-Every engine iteration advances ALL occupied slots by one token through a
-single jit'd ``decode_step``. A slot whose request still has prompt tokens
-left consumes the next prompt token (prefill and decode are thus unified at
-token granularity); otherwise it consumes its previously sampled token.
+The engine schedules **mixed steps** over a fixed set of slots. Decoding
+slots consume one (sampled) token per step; prefilling slots consume up to
+``chunk_size`` prompt tokens at once through the chunked decode path
+(``Model.decode_step`` with ``n_valid``), which writes a whole chunk of K/V
+per layer in a single call. A 512-token prompt therefore costs
+``ceil(512 / chunk_size)`` jit'd dispatches instead of 512 — the
+time-to-first-token win measured by ``benchmarks/serving_throughput.py``.
+When every occupied slot is decoding, the engine falls back to the
+single-token step (a separately compiled, narrower program). Chunking is
+enabled per-architecture via ``Model.supports_chunked_decode`` (attention
+families; recurrent/hybrid/MLA stacks step token-by-token).
+
 Finished slots are freed and refilled from the queue — no head-of-line
-blocking.
+blocking. Slot reuse runs a pre-jitted per-slot indexed reset (one
+``dynamic_update_slice`` per state leaf) instead of rebuilding the state
+tree host-side.
 
 THE PAPER lives here: constructing the engine with ``precomputed=`` makes
-every step's embedding-read + layer-0 projections a single row gather —
-the decode phase is exactly the low-batch, memory-bound regime where the
-paper's savings are largest (`benchmarks/first_layer_latency.py` measures
-it; `examples/serve_batched.py` demos it).
+every step's embedding-read + layer-0 projections a single row gather per
+token — during chunked prefill that is one contiguous *multi-row* gather per
+chunk. ``fused_gather_rope=True`` additionally folds layer-0 RoPE into that
+gather via the Pallas kernel (``kernels/gather_rope.py``), so rows go
+gather→RoPE→attention without an HBM round-trip (compiled TPU path; on CPU
+the kernel runs in interpret mode and is for validation only).
 """
 from __future__ import annotations
 
@@ -24,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.models.transformer import lm_logits
 from repro.serving.sampler import sample_tokens
 
 
@@ -45,20 +58,30 @@ class Request:
 class ServingEngine:
     def __init__(self, model: Model, params, *, max_slots: int = 8,
                  max_seq: int = 512, precomputed=None, seed: int = 0,
-                 dtype=jnp.float32, kv_quant: bool = False):
+                 dtype=jnp.float32, kv_quant: bool = False,
+                 chunk_size: int = 1, fused_gather_rope: bool = False):
         self.model, self.params = model, params
         self.max_slots, self.max_seq = max_slots, max_seq
         self.precomputed = precomputed
+        if chunk_size > 1 and not model.supports_chunked_decode():
+            chunk_size = 1
+        if fused_gather_rope and (precomputed is None or chunk_size == 1
+                                  or model.cfg.pos != 'rope'):
+            fused_gather_rope = False
+        self.chunk_size = chunk_size
+        self.fused_gather_rope = fused_gather_rope
         self.states = model.make_states(max_slots, max_seq, dtype,
-                                        kv_quant=kv_quant)
+                                        kv_quant=kv_quant, chunk=chunk_size)
         self._meta = getattr(model.cfg, 'num_meta_tokens', 0)
         if self._meta:
             # prime hymba-style learnable meta tokens into every slot's state
             from repro.models.transformer import prime_meta_states
             self.states = prime_meta_states(params, self.states, model.cfg,
                                             max_slots)
-        # template for clean slot reuse (covers caches AND recurrent states)
-        self._fresh = jax.tree_util.tree_map(lambda x: x, self.states)
+        # template for clean slot reuse (covers caches AND recurrent states).
+        # A real copy: the step/reset jits donate their states argument, so
+        # the template must not alias the live buffers.
+        self._fresh = jax.tree_util.tree_map(jnp.array, self.states)
         self.slot_req: List[Optional[Request]] = [None] * max_slots
         self.slot_pos = np.zeros(max_slots, np.int64)       # next position
         self.slot_next_tok = np.zeros(max_slots, np.int32)  # token to feed
@@ -70,9 +93,36 @@ class ServingEngine:
             logits, states = model.decode_step(
                 params, tokens, states, pos, precomputed=precomputed)
             nxt = sample_tokens(logits[:, 0], key, temps)
-            return states, logits, nxt
+            return states, nxt
 
-        self._step = jax.jit(step)
+        self._step = jax.jit(step, donate_argnums=1)
+
+        def chunk_step(params, states, tokens, pos, n_valid, key, temps):
+            h, states = model.decode_step(
+                params, tokens, states, pos, precomputed=precomputed,
+                n_valid=n_valid, return_hidden=True,
+                fused_gather_rope=self.fused_gather_rope)
+            # head only on each slot's last valid lane, not all T lanes
+            idx = jnp.maximum(n_valid - 1, 0)[:, None, None]
+            h_last = jnp.take_along_axis(h, idx, axis=1)          # (B,1,d)
+            logits = lm_logits(params, h_last, model.cfg)
+            nxt = sample_tokens(logits[:, 0], key, temps)
+            return states, nxt
+
+        self._chunk_step = jax.jit(chunk_step, donate_argnums=1) \
+            if chunk_size > 1 else None
+
+        def reset(states, fresh, slot):
+            # stacked ('body') states carry the scan axis first -> batch is 1
+            def one(path, leaf, fr):
+                axis = 1 if "'body'" in jax.tree_util.keystr(path) else 0
+                row = jax.lax.dynamic_index_in_dim(fr, slot, axis=axis,
+                                                   keepdims=True)
+                return jax.lax.dynamic_update_slice_in_dim(leaf, row, slot,
+                                                           axis=axis)
+            return jax.tree_util.tree_map_with_path(one, states, fresh)
+
+        self._reset = jax.jit(reset, donate_argnums=0)
 
     # ------------------------------------------------------------- plumbing
     def submit(self, req: Request) -> None:
@@ -82,20 +132,11 @@ class ServingEngine:
     def _reset_slot(self, slot: int) -> None:
         """Restore one slot's state (KV cache validity, recurrent/conv state,
         primed meta prefix) from the fresh template — no cross-request
-        leakage on slot reuse. Stacked ('body') states carry the scan axis
-        first, so their batch axis is 1.
+        leakage on slot reuse. One jit'd indexed copy per leaf; O(slot) work
+        instead of flattening/rebuilding the whole state tree host-side.
         """
-        def reset(path: str, leaf, fresh):
-            batch_axis = 1 if '/body/' in path or path.startswith('body/') \
-                else 0
-            idx = (slice(None),) * batch_axis + (slot,)
-            return leaf.at[idx].set(fresh[idx])
-
-        from repro.checkpoint.ckpt import _flatten, _unflatten
-        flat = _flatten(self.states)
-        flat_fresh = _flatten(self._fresh)
-        self.states = _unflatten({p: reset('/' + p, v, flat_fresh[p])
-                                  for p, v in flat.items()})
+        self.states = self._reset(self.states, self._fresh,
+                                  jnp.int32(slot))
 
     def _admit(self) -> None:
         for slot in range(self.max_slots):
@@ -107,26 +148,55 @@ class ServingEngine:
                 self._reset_slot(slot)
 
     # ----------------------------------------------------------------- run
+    def _progress(self, slot: int) -> int:
+        """Index of the next prompt token this slot will consume."""
+        return int(self.slot_pos[slot]) - self._meta
+
     def step_once(self) -> None:
         self._admit()
         active = [s for s in range(self.max_slots)
                   if self.slot_req[s] is not None]
         if not active:
             return
-        tokens = jnp.asarray(self.slot_next_tok[:, None])
-        pos = jnp.asarray(self.slot_pos.astype(np.int32))
+        prefilling = self.chunk_size > 1 and any(
+            len(self.slot_req[s].prompt) - self._progress(s) > 1
+            for s in active)
         temps = jnp.asarray([
             (self.slot_req[s].temperature if self.slot_req[s] else 0.0)
             for s in range(self.max_slots)], jnp.float32)
+        pos = jnp.asarray(self.slot_pos.astype(np.int32))
         self.key, sub = jax.random.split(self.key)
-        self.states, logits, nxt = self._step(
-            self.params, self.states, tokens, pos, sub, temps)
+
+        if prefilling:
+            T = self.chunk_size
+            tokens = np.zeros((self.max_slots, T), np.int32)
+            n_valid = np.zeros(self.max_slots, np.int32)
+            for s in active:
+                req = self.slot_req[s]
+                p = self._progress(s)
+                if p < len(req.prompt):              # prefilling slot
+                    take = min(T, len(req.prompt) - p)
+                    tokens[s, :take] = req.prompt[p:p + take]
+                    n_valid[s] = take
+                else:                                # decoding slot: 1 token
+                    tokens[s, 0] = self.slot_next_tok[s]
+                    n_valid[s] = 1
+            self.states, nxt = self._chunk_step(
+                self.params, self.states, jnp.asarray(tokens), pos,
+                jnp.asarray(n_valid), sub, temps)
+            consumed = n_valid
+        else:
+            tokens = jnp.asarray(self.slot_next_tok[:, None])
+            self.states, nxt = self._step(
+                self.params, self.states, tokens, pos, sub, temps)
+            consumed = np.ones(self.max_slots, np.int32)
+
         nxt = np.asarray(nxt)
         self.steps += 1
         for s in active:
             req = self.slot_req[s]
-            self.slot_pos[s] += 1
-            p = int(self.slot_pos[s]) - self._meta   # progress within request
+            self.slot_pos[s] += int(consumed[s])
+            p = self._progress(s)                    # progress within request
             if p < len(req.prompt):                  # still prefilling
                 self.slot_next_tok[s] = int(req.prompt[p])
                 continue

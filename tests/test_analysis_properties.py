@@ -4,7 +4,10 @@ precompute-table invariants, over randomly drawn architectures.
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip('hypothesis')
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.config import ModelConfig
 from repro.core import analyze, build_precomputed_table, eliminated_weights, \

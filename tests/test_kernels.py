@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels.embed_gather import embed_gather
@@ -38,6 +38,62 @@ def test_embed_gather_property(v, n, w128, seed):
     ids = jax.random.randint(jax.random.PRNGKey(seed + 1), (n,), 0, v)
     got = embed_gather(table, ids.astype(jnp.int32), interpret=True)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(table)[ids])
+
+
+# -------------------------------------------------------------- gather+rope
+@pytest.mark.parametrize('dtype', [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize('V,W,N,H,KH,hd', [(64, 256, 8, 4, 2, 16),
+                                           (100, 260, 17, 4, 2, 16),
+                                           (503, 384, 33, 2, 1, 32)])
+def test_gather_rope_shapes(V, W, N, H, KH, hd, dtype):
+    """Fused gather→RoPE == pure-jnp oracle to fp32 tolerance (trig argument
+    reduction may differ by ulps between vectorisation paths)."""
+    d = 64                                  # x-segment before q
+    table = rnd(0, (V, W), dtype)
+    ids = jax.random.randint(jax.random.PRNGKey(1), (N,), 0, V)
+    pos = jax.random.randint(jax.random.PRNGKey(2), (N,), 0, 512)
+    q_off, k_off = d, d + H * hd
+    got = ops.gather_rope_rows(table, ids, pos, q_off=q_off, num_heads=H,
+                               k_off=k_off, num_kv_heads=KH, head_dim=hd,
+                               theta=1e4)
+    want = ref.gather_rope_ref(table, ids, pos,
+                               segs=((q_off, H, hd), (k_off, KH, hd)),
+                               theta=1e4)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+    # untouched segments must be byte-for-byte the gathered rows
+    np.testing.assert_array_equal(np.asarray(got[:, :d]),
+                                  np.asarray(table)[np.asarray(ids), :d])
+
+
+def test_gather_rope_matches_model_apply_rope():
+    """Kernel rotation == models.layers.apply_rope on the same rows."""
+    from repro.models import layers as L
+    V, N, H, KH, hd, d = 120, 9, 4, 2, 16, 64
+    W = d + (H + 2 * KH) * hd
+    table = rnd(0, (V, W))
+    ids = jax.random.randint(jax.random.PRNGKey(1), (N,), 0, V)
+    pos = jax.random.randint(jax.random.PRNGKey(2), (N,), 0, 300)
+    got = ops.gather_rope_rows(table, ids, pos, q_off=d, num_heads=H,
+                               k_off=d + H * hd, num_kv_heads=KH,
+                               head_dim=hd, theta=1e4)
+    rows = jnp.take(table, ids, axis=0)
+    q = L.apply_rope(rows[:, d:d + H * hd].reshape(N, 1, H, hd),
+                     pos[:, None], 1e4).reshape(N, H * hd)
+    np.testing.assert_allclose(np.asarray(got[:, d:d + H * hd]),
+                               np.asarray(q), atol=1e-4, rtol=1e-4)
+
+
+def test_gather_rope_batched_ids_shape():
+    table = rnd(0, (64, 128))
+    ids = jax.random.randint(jax.random.PRNGKey(1), (2, 5), 0, 64)
+    pos = jnp.broadcast_to(jnp.arange(5)[None], (2, 5))
+    got = ops.gather_rope_rows(table, ids, pos, q_off=0, num_heads=2,
+                               k_off=32, num_kv_heads=2, head_dim=16,
+                               theta=1e4)
+    assert got.shape == (2, 5, 128)
 
 
 # -------------------------------------------------------------- rmsnorm qkv
