@@ -41,36 +41,47 @@ def _bench_model(n_layers: int = 4):
 
 def _engine_run(model, params, *, precompute: bool = False,
                 chunk_size: int = 1, n_req: int = 8, prompt_len: int = 6,
-                new_tokens: int = 16, max_seq: int = 128) -> Dict[str, float]:
+                new_tokens: int = 16, max_seq: int = 128,
+                repeats: int = 3) -> Dict[str, float]:
+    """Time ``repeats`` warm passes of the same workload and report the
+    median-total pass — single-run numbers on a shared CPU are mostly
+    scheduler noise, and BENCH_serving.json is read as a cross-PR
+    trajectory."""
     table = model.build_table(params) if precompute else None
     eng = ServingEngine(model, params, max_slots=4, max_seq=max_seq,
                         precomputed=table, chunk_size=chunk_size)
-    rng = np.random.default_rng(0)
-    reqs = [Request(uid=i,
-                    prompt=rng.integers(3, 2000,
-                                        size=max(1, prompt_len + i % 3 - 1)),
-                    max_new_tokens=new_tokens) for i in range(n_req)]
     # warmup jit (both the chunk and the single-token programs)
     w = Request(uid=-1, prompt=np.arange(max(4, chunk_size + 1)) + 3,
                 max_new_tokens=2)
     eng.submit(w)
     eng.run()
-    steps0 = eng.steps                    # exclude jit-warmup steps
-    t0 = time.perf_counter()
-    for r in reqs:
-        eng.submit(r)
-    eng.run()
-    dt = time.perf_counter() - t0
-    stats = eng.stats(reqs)
-    toks = sum(len(r.generated) for r in reqs) + sum(len(r.prompt)
-                                                     for r in reqs)
-    return {
-        'total_s': dt,
-        'us_per_token': dt / toks * 1e6,
-        'mean_ttft_s': stats['mean_ttft_s'],
-        'engine_steps': eng.steps - steps0,
-        'completed': stats['completed'],
-    }
+    passes = []
+    for _ in range(max(1, repeats)):
+        rng = np.random.default_rng(0)
+        reqs = [Request(uid=i,
+                        prompt=rng.integers(3, 2000,
+                                            size=max(1,
+                                                     prompt_len + i % 3 - 1)),
+                        max_new_tokens=new_tokens) for i in range(n_req)]
+        steps0 = eng.steps                # exclude warmup / earlier passes
+        t0 = time.perf_counter()
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        dt = time.perf_counter() - t0
+        stats = eng.stats(reqs)
+        toks = sum(len(r.generated) for r in reqs) + sum(len(r.prompt)
+                                                         for r in reqs)
+        passes.append({
+            'total_s': dt,
+            'us_per_token': dt / toks * 1e6,
+            'mean_ttft_s': stats['mean_ttft_s'],
+            'engine_steps': eng.steps - steps0,
+            'completed': stats['completed'],
+        })
+    # lower-middle pass for even counts — never report the worse of two
+    med = sorted(passes, key=lambda p: p['total_s'])[(len(passes) - 1) // 2]
+    return med
 
 
 def bench_serving() -> List[Tuple[str, float, str]]:
@@ -88,12 +99,13 @@ def bench_serving() -> List[Tuple[str, float, str]]:
 
 def bench_serving_prompt_heavy(prompt_len: int = 96, new_tokens: int = 4,
                                chunk_size: int = 32, n_req: int = 6,
-                               write_json: bool = True
+                               write_json: bool = True,
+                               n_layers: int = 4, repeats: int = 3
                                ) -> List[Tuple[str, float, str]]:
     """Long prompts, short generations: TTFT, seed engine vs chunked."""
-    model, params = _bench_model()
+    model, params = _bench_model(n_layers)
     kw = dict(n_req=n_req, prompt_len=prompt_len, new_tokens=new_tokens,
-              max_seq=256)
+              max_seq=256, repeats=repeats)
     seed_eng = _engine_run(model, params, chunk_size=1, **kw)
     chunked = _engine_run(model, params, chunk_size=chunk_size, **kw)
     chunked_pre = _engine_run(model, params, chunk_size=chunk_size,
@@ -103,8 +115,8 @@ def bench_serving_prompt_heavy(prompt_len: int = 96, new_tokens: int = 4,
             json.dump({
                 'workload': {'prompt_len': prompt_len,
                              'new_tokens': new_tokens, 'n_req': n_req,
-                             'chunk_size': chunk_size,
-                             'model': '4L d=256 fp32 CPU'},
+                             'chunk_size': chunk_size, 'repeats': repeats,
+                             'model': f'{n_layers}L d=256 fp32 CPU'},
                 'seed_token_by_token': seed_eng,
                 'chunked': chunked,
                 'chunked_precomputed': chunked_pre,
@@ -124,6 +136,20 @@ def bench_serving_prompt_heavy(prompt_len: int = 96, new_tokens: int = 4,
 
 
 if __name__ == '__main__':
-    for name, us, derived in bench_serving_prompt_heavy():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument('--smoke', action='store_true',
+                    help='small CI workload: 2 layers, short prompts — '
+                         'tracks the TTFT trajectory across PRs without '
+                         'burning CI minutes (same BENCH_serving.json '
+                         'schema)')
+    args = ap.parse_args()
+    if args.smoke:
+        rows = bench_serving_prompt_heavy(prompt_len=48, new_tokens=2,
+                                          chunk_size=16, n_req=3,
+                                          n_layers=2, repeats=2)
+    else:
+        rows = bench_serving_prompt_heavy()
+    for name, us, derived in rows:
         print(f'{name},{us:.2f},{derived}')
     print(f'wrote {BENCH_JSON}')

@@ -28,10 +28,16 @@ def main() -> None:
     ap.add_argument('--no-precompute', action='store_true')
     ap.add_argument('--chunk-size', type=int, default=16,
                     help='prompt tokens per prefill dispatch (1 = token-by-'
-                         'token; auto-falls back for recurrent/hybrid/MLA)')
+                         'token; chunking works for every architecture — '
+                         'dense, MoE, MLA, SSM, hybrid, VLM-text)')
     ap.add_argument('--fused-gather-rope', action='store_true',
                     help='fold layer-0 RoPE into the precomputed-row gather '
-                         '(Pallas kernel; needs precompute + chunking)')
+                         '(Pallas kernel; needs precompute + chunking + a '
+                         'flat q/k layer-0 row layout)')
+    ap.add_argument('--score', action='store_true',
+                    help='logits-on-demand demo: score each prompt (mean '
+                         'token logprob over all positions) instead of '
+                         'generating')
     ap.add_argument('--seed', type=int, default=0)
     args = ap.parse_args()
 
@@ -55,6 +61,23 @@ def main() -> None:
         print(f'chunked prefill: {eng.chunk_size} tokens/dispatch'
               + (' + fused gather→RoPE' if eng.fused_gather_rope else ''))
     rng = np.random.default_rng(args.seed)
+    if args.score:
+        prompts = [rng.integers(3, cfg.vocab_size,
+                                size=int(rng.integers(4, 12)))
+                   for _ in range(args.requests)]
+        t0 = time.time()
+        all_logits = eng.score(prompts)
+        dt = time.time() - t0
+        for i, (p, lg) in enumerate(zip(prompts, all_logits)):
+            m = lg.max(-1, keepdims=True)
+            logp = lg - m - np.log(np.exp(lg - m).sum(-1, keepdims=True))
+            mean_lp = float(np.mean([logp[t - 1, p[t]]
+                                     for t in range(1, len(p))]))
+            print(f'prompt {i}: len={len(p)} logits={lg.shape} '
+                  f'mean token logprob={mean_lp:.3f}')
+        toks = sum(len(p) for p in prompts)
+        print(f'scored {len(prompts)} prompts ({toks} tokens) in {dt:.2f}s')
+        return
     reqs = [Request(uid=i,
                     prompt=rng.integers(3, cfg.vocab_size,
                                         size=int(rng.integers(4, 12))),

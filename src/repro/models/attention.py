@@ -329,19 +329,16 @@ def cache_update(cache: Dict, k_new: jax.Array, v_new: jax.Array,
     return out
 
 
-def cache_update_chunk(cache: Dict, k_new: jax.Array, v_new: jax.Array,
-                       pos0: jax.Array, n_valid: jax.Array) -> Dict:
-    """Write a whole chunk (B,T,KV,hd) at ring indices ``(pos0 + t) % Sc``,
-    masked to ``t < n_valid`` per slot — one call instead of T scatters.
+def ring_chunk_index(Sc: int, pos0: jax.Array, n_valid: jax.Array, T: int
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Per ring slot, the unique chunk lane whose write lands on it *last*.
 
-    Formulated as a *gather*: for every ring slot we compute the unique chunk
-    index that lands on it last (ring laps inside one chunk resolve to the
-    final write), then select chunk-vs-old per slot. Deterministic where a
-    scatter with duplicate indices would not be, and bit-identical to T
-    sequential :func:`cache_update` calls.
+    A T-token chunk writes lane ``t < n_valid[b]`` at ring index
+    ``(pos0[b] + t) % Sc``; laps inside one chunk resolve to the final write.
+    Returns ``(tc, hit)``: ``tc`` (B,Sc) is the winning lane (clipped to
+    [0, T)), ``hit`` (B,Sc) marks slots any valid lane lands on. Shared by
+    the attention K/V and the MLA latent chunk writes.
     """
-    B, T = k_new.shape[:2]
-    Sc = cache['k'].shape[1]
     pos0 = pos0.astype(jnp.int32)
     n_valid = n_valid.astype(jnp.int32)
     slots = jnp.arange(Sc, dtype=jnp.int32)[None]            # (1,Sc)
@@ -349,12 +346,36 @@ def cache_update_chunk(cache: Dict, k_new: jax.Array, v_new: jax.Array,
     # unique t in [n_valid - Sc, n_valid) with (pos0 + t) % Sc == slot:
     t = n_valid[:, None] - 1 - ((last - slots) % Sc)         # (B,Sc)
     hit = t >= 0                                             # n_valid==0 -> none
-    tc = jnp.clip(t, 0, T - 1)
+    return jnp.clip(t, 0, T - 1), hit
+
+
+def ring_chunk_select(new: jax.Array, old: jax.Array, tc: jax.Array,
+                      hit: jax.Array) -> jax.Array:
+    """Gather lane ``tc`` of ``new`` (B,T,...) into each ring slot of ``old``
+    (B,Sc,...) where ``hit``; elsewhere keep ``old``. Pure select, so a chunk
+    write is bit-identical to the sequential per-token writes it replaces."""
+    B, Sc = tc.shape
+    shp = (B, Sc) + (1,) * (new.ndim - 2)
+    g = jnp.take_along_axis(new, tc.reshape(shp), axis=1)
+    return jnp.where(hit.reshape(shp), g.astype(old.dtype), old)
+
+
+def cache_update_chunk(cache: Dict, k_new: jax.Array, v_new: jax.Array,
+                       pos0: jax.Array, n_valid: jax.Array) -> Dict:
+    """Write a whole chunk (B,T,KV,hd) at ring indices ``(pos0 + t) % Sc``,
+    masked to ``t < n_valid`` per slot — one call instead of T scatters.
+
+    Formulated as a *gather* (see :func:`ring_chunk_index`): deterministic
+    where a scatter with duplicate indices would not be, and bit-identical
+    to T sequential :func:`cache_update` calls.
+    """
+    B, T = k_new.shape[:2]
+    Sc = cache['k'].shape[1]
+    pos0 = pos0.astype(jnp.int32)
+    tc, hit = ring_chunk_index(Sc, pos0, n_valid, T)
 
     def sel(new, old):
-        shp = (B, Sc) + (1,) * (new.ndim - 2)
-        g = jnp.take_along_axis(new, tc.reshape(shp), axis=1)
-        return jnp.where(hit.reshape(shp), g.astype(old.dtype), old)
+        return ring_chunk_select(new, old, tc, hit)
 
     out = dict(cache)
     if 'k_scale' in cache:
@@ -408,6 +429,35 @@ def decode_step(params, x_normed: jax.Array, cache: Dict, pos: jax.Array,
     return L.dense(params['wo'], ctx), cache
 
 
+def _attend_lanes(q: jax.Array, cache: Dict, pos_t: jax.Array,
+                  cfg: ModelConfig, window: int) -> jax.Array:
+    """Masked softmax attention of (B,T',KV,G,hd) post-RoPE queries at
+    positions ``pos_t`` (B,T') against the cache -> (B,T',KV,G,hd)."""
+    hd = cfg.head_dim
+    if 'k_scale' in cache:
+        scores = jnp.einsum('btkgd,bskd->bkgts', q.astype(jnp.float32),
+                            cache['k'].astype(jnp.float32))
+        scores = scores * cache['k_scale'].astype(jnp.float32) \
+            .transpose(0, 2, 1)[:, :, None, None, :] * hd ** -0.5
+    else:
+        scores = jnp.einsum('btkgd,bskd->bkgts', q.astype(jnp.float32),
+                            cache['k'].astype(jnp.float32)) * hd ** -0.5
+    cp = cache['pos'][:, None, None, None, :]                # (B,1,1,1,Sc)
+    qp = pos_t[:, None, None, :, None]                       # (B,1,1,T',1)
+    valid = (cp >= 0) & (cp <= qp)
+    if window:
+        valid &= (qp - cp) < window
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    if 'k_scale' in cache:
+        pv = probs * cache['v_scale'].astype(jnp.float32) \
+            .transpose(0, 2, 1)[:, :, None, None, :]
+        return jnp.einsum('bkgts,bskd->btkgd', pv,
+                          cache['v'].astype(jnp.float32)).astype(q.dtype)
+    return jnp.einsum('bkgts,bskd->btkgd', probs.astype(cache['v'].dtype),
+                      cache['v'])
+
+
 def decode_attend_chunk(q: jax.Array, cache: Dict, pos0: jax.Array,
                         cfg: ModelConfig, *, rope_theta, window: int = 0,
                         rope_applied: bool = False) -> jax.Array:
@@ -418,6 +468,14 @@ def decode_attend_chunk(q: jax.Array, cache: Dict, pos0: jax.Array,
     their positions, and the ``stored_pos <= query_pos`` validity test hides
     the not-yet-seen ones. ``rope_applied`` skips the q rotation for rows
     coming from the fused gather→RoPE kernel.
+
+    Query lanes are attended ONE AT A TIME (T is the static serving chunk
+    size) so every lane issues contractions with exactly the single-step
+    shapes: a batched (T,S) score einsum rounds differently from the T=1
+    dot for some head geometries (observed on CPU for MHA, where the group
+    dim is 1), which would break the chunked == token-by-token bit-identity
+    contract. The lanes still run inside one jit'd dispatch with one
+    whole-chunk cache write — the wins chunked prefill is about.
     """
     B, T = q.shape[0], q.shape[1]
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -426,29 +484,12 @@ def decode_attend_chunk(q: jax.Array, cache: Dict, pos0: jax.Array,
     if cfg.pos == 'rope' and not rope_applied:
         q = L.apply_rope(q, pos_t, rope_theta)
     q = q.reshape(B, T, KV, H // KV, hd)
-    if 'k_scale' in cache:
-        scores = jnp.einsum('btkgd,bskd->bkgts', q.astype(jnp.float32),
-                            cache['k'].astype(jnp.float32))
-        scores = scores * cache['k_scale'].astype(jnp.float32) \
-            .transpose(0, 2, 1)[:, :, None, None, :] * hd ** -0.5
+    if T == 1:
+        ctx = _attend_lanes(q, cache, pos_t, cfg, window)
     else:
-        scores = jnp.einsum('btkgd,bskd->bkgts', q.astype(jnp.float32),
-                            cache['k'].astype(jnp.float32)) * hd ** -0.5
-    cp = cache['pos'][:, None, None, None, :]                # (B,1,1,1,Sc)
-    qp = pos_t[:, None, None, :, None]                       # (B,1,1,T,1)
-    valid = (cp >= 0) & (cp <= qp)
-    if window:
-        valid &= (qp - cp) < window
-    scores = jnp.where(valid, scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1)
-    if 'k_scale' in cache:
-        pv = probs * cache['v_scale'].astype(jnp.float32) \
-            .transpose(0, 2, 1)[:, :, None, None, :]
-        ctx = jnp.einsum('bkgts,bskd->btkgd', pv,
-                         cache['v'].astype(jnp.float32)).astype(q.dtype)
-    else:
-        ctx = jnp.einsum('bkgts,bskd->btkgd', probs.astype(cache['v'].dtype),
-                         cache['v'])
+        ctx = jnp.concatenate(
+            [_attend_lanes(q[:, t:t + 1], cache, pos_t[:, t:t + 1], cfg,
+                           window) for t in range(T)], axis=1)
     return ctx.reshape(B, T, H * hd)
 
 

@@ -264,7 +264,7 @@ def block_make_state(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
     if kind in HYBRID_KINDS:
         return {'attn': A.make_cache(cfg, batch, seq_len,
                                      window=kind_window(cfg, kind),
-                                     dtype=dtype, quant=quant),
+                                     dtype=dtype, quant=quant, chunk=chunk),
                 'ssm': S.mamba_init_state(cfg, batch)}
     if kind == 'mlstm':
         return S.mlstm_init_state(cfg, batch)
@@ -295,7 +295,8 @@ def block_state_abstract(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
         ssm_st = jax.eval_shape(lambda: S.mamba_init_state(cfg, batch))
         return {'attn': A.cache_abstract(cfg, batch, seq_len, rules,
                                          window=kind_window(cfg, kind),
-                                         dtype=dtype, quant=quant),
+                                         dtype=dtype, quant=quant,
+                                         chunk=chunk),
                 'ssm': recur_sds(ssm_st)}
     if kind == 'mlstm':
         st = jax.eval_shape(lambda: S.mlstm_init_state(cfg, batch))
@@ -316,18 +317,18 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
     """Decode step. h: (B,T,d); pos: (B,) start positions. -> (h_out, state).
 
     ``n_valid is None`` is the classic one-token step (T == 1). Passing
-    ``n_valid`` (B,) switches attention kinds to the chunked-prefill path:
-    the whole T-token chunk is projected at once, the valid prefix written
-    to the cache in one call, and all T queries attended together. Norms and
-    FFN/MoE are token-wise, so the surrounding code is shared. Only
-    attention kinds support T > 1 (see transformer.supports_chunked_decode).
+    ``n_valid`` (B,) switches to the chunked-prefill path — every kind
+    supports it: attention (incl. MLA) projects the whole T-token chunk at
+    once, writes the valid prefix to the cache in one call, and attends all
+    T queries together; recurrent kinds (mLSTM/sLSTM/mamba) scan the
+    recurrence over the chunk's lanes with per-slot masked state commits
+    (see ssm.masked_chunk_scan). Norms and FFN/MoE are token-wise, so the
+    surrounding code is shared. Both paths are bit-identical to T
+    sequential one-token steps on the valid lanes.
     """
     theta = kind_theta(cfg, kind)
     window = kind_window(cfg, kind)
     chunked = n_valid is not None
-    if chunked and (kind not in ATTN_KINDS or cfg.mla):
-        raise NotImplementedError(
-            f'chunked decode not supported for kind={kind!r} (mla={bool(cfg.mla)})')
 
     def attend(xn, qkv):
         if chunked:
@@ -336,6 +337,14 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
                                   qkv=qkv, rope_applied=rope_applied)
         return A.decode_step(params['attn'], xn, state, pos, cfg,
                              rope_theta=theta, window=window, qkv=qkv)
+
+    def attend_mla(xn, latents):
+        if chunked:
+            return M.mla_decode_chunk(params['attn'], xn, state, pos,
+                                      n_valid, cfg, rope_theta=theta,
+                                      latents=latents)
+        return M.mla_decode_step(params['attn'], xn, state, pos, cfg,
+                                 rope_theta=theta, latents=latents)
 
     if kind in ATTN_KINDS:
         if cfg.block_type == 'parallel':
@@ -354,16 +363,14 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
         # serial
         if pre is not None:
             if cfg.mla:
-                attn_out, state = M.mla_decode_step(
-                    params['attn'], None, state, pos, cfg, rope_theta=theta,
-                    latents=(pre['q'], pre['ckv'], pre['kpe']))
+                attn_out, state = attend_mla(
+                    None, (pre['q'], pre['ckv'], pre['kpe']))
             else:
                 attn_out, state = attend(None, (pre['q'], pre['k'], pre['v']))
         else:
             xn = L.norm_apply(params['ln1'], h, cfg.norm)
             if cfg.mla:
-                attn_out, state = M.mla_decode_step(params['attn'], xn, state,
-                                                    pos, cfg, rope_theta=theta)
+                attn_out, state = attend_mla(xn, None)
             else:
                 attn_out, state = attend(xn, None)
         h = h + attn_out
@@ -386,16 +393,24 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
             qkv = A.compute_qkv(params['attn'], xn, cfg)
             mpre = None
         q, k, v = qkv
-        B = q.shape[0]
-        k_h = k.reshape(B, 1, cfg.num_kv_heads, cfg.head_dim)
+        B, T = q.shape[:2]
+        k_h = k.reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
         if cfg.pos == 'rope':
-            k_h = L.apply_rope(k_h, pos[:, None], theta)
-        v_h = v.reshape(B, 1, cfg.num_kv_heads, cfg.head_dim)
-        acache = A.cache_update(state['attn'], k_h, v_h, pos)
-        ctx = A.decode_attend(q, acache, pos, cfg, rope_theta=theta,
-                              window=window)
+            pos_t = pos[:, None].astype(jnp.int32) \
+                + jnp.arange(T, dtype=jnp.int32)
+            k_h = L.apply_rope(k_h, pos_t, theta)
+        v_h = v.reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+        if chunked:
+            acache = A.cache_update_chunk(state['attn'], k_h, v_h, pos,
+                                          n_valid)
+            ctx = A.decode_attend_chunk(q, acache, pos, cfg, rope_theta=theta,
+                                        window=window)
+        else:
+            acache = A.cache_update(state['attn'], k_h, v_h, pos)
+            ctx = A.decode_attend(q, acache, pos, cfg, rope_theta=theta,
+                                  window=window)
         y_ssm, sstate = S.mamba_step(params['mamba'], xn, state['ssm'], cfg,
-                                     pre=mpre)
+                                     pre=mpre, n_valid=n_valid)
         mix = 0.5 * (L.rmsnorm(ctx, params['norm_attn']['scale'])
                      + L.rmsnorm(y_ssm, params['norm_ssm']['scale']))
         h = h + L.dense(params['w_out'], mix)
@@ -407,18 +422,22 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
         if pre is not None:
             y, state = S.mlstm_step(params['core'], None, state, cfg,
                                     pre={k: pre[k] for k in
-                                         ('u1', 'u2', 'v', 'ifg')})
+                                         ('u1', 'u2', 'v', 'ifg')},
+                                    n_valid=n_valid)
         else:
             xn = L.norm_apply(params['ln1'], h, cfg.norm)
-            y, state = S.mlstm_step(params['core'], xn, state, cfg)
+            y, state = S.mlstm_step(params['core'], xn, state, cfg,
+                                    n_valid=n_valid)
         return h + y, state
 
     if kind == 'slstm':
         xn = L.norm_apply(params['ln1'], h, cfg.norm)
         if pre is not None:
             spre = {'z_in': pre['z_in'], 'o_in': pre['o_in'], 'xn': xn}
-            y, state = S.slstm_step(params['core'], None, state, cfg, pre=spre)
+            y, state = S.slstm_step(params['core'], None, state, cfg,
+                                    pre=spre, n_valid=n_valid)
         else:
-            y, state = S.slstm_step(params['core'], xn, state, cfg)
+            y, state = S.slstm_step(params['core'], xn, state, cfg,
+                                    n_valid=n_valid)
         return h + y, state
     raise ValueError(kind)

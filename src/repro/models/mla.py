@@ -153,6 +153,17 @@ def mla_decode_step(params, x_normed: jax.Array, cache: Dict, pos: jax.Array,
     }
     q_nope, q_pe = _split_q(q[:, 0], cfg)                 # (B,H,dn)/(B,H,dr)
     q_pe = L.apply_rope(q_pe[:, None], pos[:, None], rope_theta)[:, 0]
+    ctx = _mla_attend_lane(params, q_nope, q_pe, cache, pos, cfg)
+    return L.dense(params['wo'], ctx.reshape(B, 1, -1)), cache
+
+
+def _mla_attend_lane(params, q_nope: jax.Array, q_pe: jax.Array, cache: Dict,
+                     pos: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Absorbed-form attention of ONE query lane (B,H,·) at positions ``pos``
+    (B,) against the latent cache -> ctx (B,H,v_head_dim). Shared by the
+    single-token step and (per lane) the chunked-prefill step, so both issue
+    identically-shaped contractions — the bit-identity contract."""
+    m = cfg.mla
     # absorb W_UK into the query: scores against the latent cache directly
     q_abs = jnp.einsum('bhd,rhd->bhr', q_nope.astype(jnp.float32),
                        params['wuk'].astype(jnp.float32))
@@ -167,6 +178,56 @@ def mla_decode_step(params, x_normed: jax.Array, cache: Dict, pos: jax.Array,
     probs = jax.nn.softmax(scores, axis=-1)
     ctx_lat = jnp.einsum('bhs,bsr->bhr', probs.astype(cache['ckv'].dtype),
                          cache['ckv'])
-    ctx = jnp.einsum('bhr,rhd->bhd', ctx_lat,
-                     params['wuv'].astype(ctx_lat.dtype))
-    return L.dense(params['wo'], ctx.reshape(B, 1, -1)), cache
+    return jnp.einsum('bhr,rhd->bhd', ctx_lat,
+                      params['wuv'].astype(ctx_lat.dtype))
+
+
+def mla_cache_update_chunk(cache: Dict, c_kv: jax.Array, k_pe_rot: jax.Array,
+                           pos0: jax.Array, n_valid: jax.Array) -> Dict:
+    """Whole-chunk latent cache write: lanes ``t < n_valid[b]`` land at ring
+    index ``(pos0 + t) % Sc`` — the MLA shape of the ring-safe
+    :func:`repro.models.attention.cache_update_chunk` (same gather-based
+    last-writer-wins formulation, bit-identical to sequential writes)."""
+    from repro.models.attention import ring_chunk_index, ring_chunk_select
+    Sc = cache['ckv'].shape[1]
+    T = c_kv.shape[1]
+    tc, hit = ring_chunk_index(Sc, pos0, n_valid, T)
+    pos0 = pos0.astype(jnp.int32)
+    return {
+        'ckv': ring_chunk_select(c_kv, cache['ckv'], tc, hit),
+        'kpe': ring_chunk_select(k_pe_rot, cache['kpe'], tc, hit),
+        'pos': jnp.where(hit, pos0[:, None] + tc, cache['pos']),
+    }
+
+
+def mla_decode_chunk(params, x_normed: Optional[jax.Array], cache: Dict,
+                     pos0: jax.Array, n_valid: jax.Array, cfg: ModelConfig, *,
+                     rope_theta, latents: Optional[Tuple] = None
+                     ) -> Tuple[jax.Array, Dict]:
+    """Absorbed-form chunked-prefill MLA: project (or take precomputed
+    latents for) a whole (B,T) chunk, write the valid lanes' ``c_kv``/``k_pe``
+    into the cache in one call, attend all T queries against it. Query lane
+    ``t`` sits at position ``pos0 + t``; in-chunk causality falls out of the
+    ``stored_pos <= query_pos`` validity test (future in-chunk keys are in
+    the cache but masked). Padding lanes (``t >= n_valid``) compute garbage
+    and never write.
+
+    Query lanes attend one at a time through :func:`_mla_attend_lane` (T is
+    the static serving chunk size) inside the one jit'd dispatch — same
+    reasoning as ``attention.decode_attend_chunk``: identical contraction
+    shapes are what make the bit-identity contract hold on every geometry.
+    """
+    if latents is None:
+        q, c_kv, k_pe = compute_latents(params, x_normed, cfg)
+    else:
+        q, c_kv, k_pe = latents
+    B, T = q.shape[:2]
+    pos_t = pos0[:, None].astype(jnp.int32) + jnp.arange(T, dtype=jnp.int32)
+    k_pe_rot = L.apply_rope(k_pe[:, :, None, :], pos_t, rope_theta)[:, :, 0]
+    cache = mla_cache_update_chunk(cache, c_kv, k_pe_rot, pos0, n_valid)
+    q_nope, q_pe = _split_q(q, cfg)                   # (B,T,H,dn)/(B,T,H,dr)
+    q_pe = L.apply_rope(q_pe, pos_t, rope_theta)
+    ctx = jnp.stack([_mla_attend_lane(params, q_nope[:, t], q_pe[:, t],
+                                      cache, pos_t[:, t], cfg)
+                     for t in range(T)], axis=1)      # (B,T,H,dv)
+    return L.dense(params['wo'], ctx.reshape(B, T, -1)), cache

@@ -85,7 +85,8 @@ class Model:
 
         T == 1 with ``n_valid=None`` is the classic decode step. Passing
         ``n_valid`` (B,) runs the chunked-prefill fast path (see
-        transformer.lm_decode_step); gate on :meth:`supports_chunked_decode`.
+        transformer.lm_decode_step) — supported by every architecture kind
+        except audio (whose decode is driven by the enc-dec API).
         """
         c = self.cfg
         if c.arch_class == 'audio':
@@ -96,9 +97,6 @@ class Model:
                                 precomputed=precomputed, rules=rules,
                                 n_valid=n_valid, return_hidden=return_hidden,
                                 fused_gather_rope=fused_gather_rope)
-
-    def supports_chunked_decode(self) -> bool:
-        return T.supports_chunked_decode(self.cfg)
 
     # ------------------------------------------------------------- states
     def make_states(self, batch: int, seq_len: int, dtype=jnp.bfloat16,

@@ -68,6 +68,46 @@ def time_scan(body, s0, xs, *, chunk_target: int = 256):
     return s1, ys
 
 
+# ======================================================= masked chunk scan
+def _keep_merge(keep: jax.Array):
+    """Per-slot state merge for the chunked-prefill scan: take ``new`` where
+    ``keep`` (B,) else ``old``. Pure select — no float ops — so committed
+    states are bit-identical to the single-step path."""
+    def mrg(new, old):
+        return jnp.where(keep.reshape(keep.shape + (1,) * (new.ndim - 1)),
+                         new, old)
+    return mrg
+
+
+def masked_chunk_scan(step_fn, state: Tuple, xs_bt: Tuple,
+                      n_valid: jax.Array) -> Tuple[Tuple, jax.Array]:
+    """Scan a recurrence over the T lanes of a chunk with per-slot masked
+    state commits.
+
+    ``step_fn(state, *x_t) -> (new_state, y_t)`` is the single-timestep
+    recurrence (state: tuple of (B, ...) leaves; x_t: (B, ...) slices).
+    Lane ``t`` of slot ``b`` is *computed* unconditionally but only
+    *committed* where ``t < n_valid[b]`` — padding lanes leave every state
+    leaf untouched, which is what makes a T-lane chunk bit-identical to
+    ``n_valid`` sequential single steps. Returns (final state, ys (B,T,...)).
+
+    T is the (static, small) serving chunk size, so the loop is UNROLLED
+    rather than ``lax.scan``-ed: a scan compiles its body as one fused XLA
+    unit whose FMA contractions round differently from the op-by-op
+    single-step decode path — the unrolled form replays the exact op
+    sequence of T sequential steps, which is what makes the bit-identity
+    contract hold (HLO size is O(chunk), not O(context)).
+    """
+    T = jax.tree_util.tree_leaves(xs_bt)[0].shape[1]
+    ys = []
+    for t in range(T):
+        new_state, y_t = step_fn(state, *(x[:, t] for x in xs_bt))
+        mrg = _keep_merge(t < n_valid)
+        state = tuple(mrg(n, o) for n, o in zip(new_state, state))
+        ys.append(y_t)
+    return state, jnp.stack(ys, axis=1)
+
+
 # ============================================================== causal conv
 def conv_schema(width: int, kernel: int) -> Dict:
     return {'w': ParamSpec((kernel, width), ('conv_k', 'embed_act'), 'fan_in'),
@@ -151,13 +191,39 @@ def mlstm_init_state(cfg: ModelConfig, batch: int) -> Dict:
 
 
 def _mlstm_core(params, pre: Dict, state: Dict, cfg: ModelConfig,
-                single_step: bool) -> Tuple[jax.Array, Dict]:
+                single_step: bool,
+                n_valid: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
     ed, H, dh = mlstm_dims(cfg)
     dtype = pre['u1'].dtype
     B, S = pre['u1'].shape[:2]
 
     def shape_h(t):                                          # (B,S,ed)->(B,S,H,dh)
         return t.reshape(B, S, H, dh).astype(jnp.float32)
+
+    if n_valid is not None:
+        # chunked prefill: scan conv + recurrence over the chunk's S lanes,
+        # committing states only where t < n_valid (see masked_chunk_scan).
+        v_all = shape_h(pre['v'])
+        ifg = pre['ifg'].astype(jnp.float32).reshape(B, S, 2, H)
+
+        def one(carry, u1_t, v_t, i_t, f_t):
+            C, n, m, buf = carry
+            c_t, new_buf = conv_step(params['conv'], u1_t, buf.astype(dtype))
+            c_in = jax.nn.silu(c_t)[:, None]                 # (B,1,ed)
+            q_t = L.dense(params['wq'], c_in) \
+                .reshape(B, 1, H, dh).astype(jnp.float32)
+            k_t = L.dense(params['wk'], c_in) \
+                .reshape(B, 1, H, dh).astype(jnp.float32) * dh ** -0.5
+            (C, n, m), h_t = _mlstm_recurrence(q_t[:, 0], k_t[:, 0], v_t,
+                                               i_t, f_t, (C, n, m))
+            return (C, n, m, new_buf.astype(jnp.float32)), h_t
+
+        s1c, h = masked_chunk_scan(
+            one, (state['C'], state['n'], state['m'], state['conv']),
+            (pre['u1'], v_all, ifg[:, :, 0], ifg[:, :, 1]), n_valid)
+        s1, conv_buf = s1c[:3], s1c[3]
+        h = h.reshape(B, S, ed).astype(dtype)
+        return _mlstm_tail(params, pre, h, s1, conv_buf, cfg)
 
     if single_step:
         c_t, conv_buf = conv_step(params['conv'], pre['u1'][:, 0],
@@ -184,14 +250,21 @@ def _mlstm_core(params, pre: Dict, state: Dict, cfg: ModelConfig,
         s1, h = time_scan(body, s0, xs)
         h = jnp.moveaxis(h, 0, 1)                            # (B,S,H,dh)
     h = h.reshape(B, S, ed).astype(dtype)
+    return _mlstm_tail(params, pre, h, s1,
+                       conv_buf.astype(jnp.float32) if conv_buf is not None
+                       else state['conv'], cfg)
+
+
+def _mlstm_tail(params, pre: Dict, h: jax.Array, s1: Tuple,
+                conv_f32: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+    """Token-wise output path (head-norm, gate, down-proj) + state packing."""
+    ed, H, dh = mlstm_dims(cfg)
+    B, S = h.shape[:2]
     h = L.rmsnorm(h.reshape(B, S, H, dh),
                   params['out_norm']['scale'].reshape(H, dh)).reshape(B, S, ed)
     out = h * jax.nn.silu(pre['u2'])
     y = L.dense(params['w_down'], out)
-    new_state = {'C': s1[0], 'n': s1[1], 'm': s1[2],
-                 'conv': conv_buf.astype(jnp.float32) if conv_buf is not None
-                 else state['conv']}
-    return y, new_state
+    return y, {'C': s1[0], 'n': s1[1], 'm': s1[2], 'conv': conv_f32}
 
 
 def mlstm_apply(params, xn: jax.Array, cfg: ModelConfig, *,
@@ -206,10 +279,13 @@ def mlstm_apply(params, xn: jax.Array, cfg: ModelConfig, *,
 
 
 def mlstm_step(params, xn: jax.Array, state: Dict, cfg: ModelConfig, *,
-               pre: Optional[Dict] = None) -> Tuple[jax.Array, Dict]:
+               pre: Optional[Dict] = None,
+               n_valid: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+    """Decode step. T == 1 classic, or a (B,T) chunk when ``n_valid`` given."""
     if pre is None:
         pre = mlstm_preproj(params, xn)
-    return _mlstm_core(params, pre, state, cfg, single_step=True)
+    return _mlstm_core(params, pre, state, cfg,
+                       single_step=n_valid is None, n_valid=n_valid)
 
 
 # ==================================================================== sLSTM
@@ -278,12 +354,38 @@ def _slstm_recurrence(params, z_in, o_in, i_in, f_in, state):
 
 
 def _slstm_core(params, pre: Dict, state: Dict, cfg: ModelConfig,
-                single_step: bool) -> Tuple[jax.Array, Dict]:
+                single_step: bool,
+                n_valid: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
     H, dh = slstm_dims(cfg)
     d = cfg.d_model
     xn = pre['xn']
     dtype = xn.dtype
     B, S = xn.shape[:2]
+
+    if n_valid is not None:
+        z_all = pre['z_in'].reshape(B, S, H, dh).astype(jnp.float32)
+        o_all = pre['o_in'].reshape(B, S, H, dh).astype(jnp.float32)
+
+        def one(carry, xn_t, z_t, o_t):
+            h0, c0, n0, m0, buf = carry
+            c_t, new_buf = conv_step(params['conv'], xn_t, buf.astype(dtype))
+            c_in = jax.nn.silu(c_t)[:, None]                 # (B,1,d)
+            i_t = L.dense(params['w_i'], c_in) \
+                .reshape(B, 1, H, dh).astype(jnp.float32)
+            f_t = L.dense(params['w_f'], c_in) \
+                .reshape(B, 1, H, dh).astype(jnp.float32)
+            s_new, h_t = _slstm_recurrence(params, z_t, o_t, i_t[:, 0],
+                                           f_t[:, 0], (h0, c0, n0, m0))
+            return s_new + (new_buf.astype(jnp.float32),), h_t
+
+        s1c, h = masked_chunk_scan(
+            one, (state['h'], state['c'], state['n'], state['m'],
+                  state['conv']),
+            (xn, z_all, o_all), n_valid)
+        s1, conv_f32 = s1c[:4], s1c[4]
+        h = h.reshape(B, S, d).astype(dtype)
+        return _slstm_tail(params, h, s1, conv_f32, cfg)
+
     if single_step:
         c_t, conv_buf = conv_step(params['conv'], xn[:, 0],
                                   state['conv'].astype(dtype))
@@ -311,14 +413,20 @@ def _slstm_core(params, pre: Dict, state: Dict, cfg: ModelConfig,
         s1, h = time_scan(body, s0, xs)
         h = jnp.moveaxis(h, 0, 1)
     h = h.reshape(B, S, d).astype(dtype)
+    return _slstm_tail(params, h, s1,
+                       conv_buf.astype(jnp.float32) if conv_buf is not None
+                       else state['conv'], cfg)
+
+
+def _slstm_tail(params, h: jax.Array, s1: Tuple, conv_f32: jax.Array,
+                cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+    """Token-wise output path (norm + GeGLU FFN) + state packing."""
     h = L.rmsnorm(h, params['out_norm']['scale'])
     up = L.dense(params['ffn_up'], h)
     pf = up.shape[-1] // 2
     y = L.dense(params['ffn_down'], jax.nn.gelu(up[..., :pf]) * up[..., pf:])
-    new_state = {'h': s1[0], 'c': s1[1], 'n': s1[2], 'm': s1[3],
-                 'conv': conv_buf.astype(jnp.float32) if conv_buf is not None
-                 else state['conv']}
-    return y, new_state
+    return y, {'h': s1[0], 'c': s1[1], 'n': s1[2], 'm': s1[3],
+               'conv': conv_f32}
 
 
 def slstm_apply(params, xn: jax.Array, cfg: ModelConfig, *,
@@ -331,10 +439,13 @@ def slstm_apply(params, xn: jax.Array, cfg: ModelConfig, *,
 
 
 def slstm_step(params, xn: jax.Array, state: Dict, cfg: ModelConfig, *,
-               pre: Optional[Dict] = None) -> Tuple[jax.Array, Dict]:
+               pre: Optional[Dict] = None,
+               n_valid: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+    """Decode step. T == 1 classic, or a (B,T) chunk when ``n_valid`` given."""
     if pre is None:
         pre = slstm_preproj(params, xn)
-    return _slstm_core(params, pre, state, cfg, single_step=True)
+    return _slstm_core(params, pre, state, cfg,
+                       single_step=n_valid is None, n_valid=n_valid)
 
 
 # ============================================== Mamba2-style head (Hymba)
@@ -390,11 +501,38 @@ def _mamba_recurrence(x_c, B_, C_, dt_c, decay_c, d_skip_c, S):
 
 
 def _mamba_core(params, pre: Dict, state: Dict, cfg: ModelConfig,
-                single_step: bool, rules=None) -> Tuple[jax.Array, Dict]:
+                single_step: bool, rules=None,
+                n_valid: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
     ed, H, dh = mamba_dims(cfg)
     N = cfg.ssm.state_dim
     dtype = pre['x_in'].dtype
     B, S_len = pre['x_in'].shape[:2]
+
+    if n_valid is not None:
+        a_chunk = -jnp.exp(params['a_log'].astype(jnp.float32))
+        dsk = jnp.repeat(params['d_skip'].astype(jnp.float32), dh)
+
+        def one(carry, x_t):
+            S, buf = carry
+            xc, new_buf = conv_step(params['conv'], x_t, buf.astype(dtype))
+            xc = jax.nn.silu(xc)[:, None]                    # (B,1,ed)
+            bcdt = L.dense(params['w_bcdt'], xc).astype(jnp.float32)
+            B_t, C_t = bcdt[:, 0, :N], bcdt[:, 0, N:2 * N]
+            dt_t = jax.nn.softplus(bcdt[:, 0, 2 * N:]
+                                   + params['dt_bias'].astype(jnp.float32))
+            decay_t = jnp.exp(a_chunk * dt_t)
+            S, y_t = _mamba_recurrence(
+                xc[:, 0].astype(jnp.float32), B_t, C_t,
+                jnp.repeat(dt_t, dh, axis=-1),
+                jnp.repeat(decay_t, dh, axis=-1), dsk, S)
+            return (S, new_buf.astype(jnp.float32)), y_t
+
+        (S1, conv_f32), y = masked_chunk_scan(
+            one, (state['S'], state['conv']), (pre['x_in'],), n_valid)
+        y = y.reshape(B, S_len, ed).astype(dtype)
+        y = y * jax.nn.silu(pre['gate'])
+        return y, {'S': S1, 'conv': conv_f32}
+
     if single_step:
         xc, conv_buf = conv_step(params['conv'], pre['x_in'][:, 0],
                                  state['conv'].astype(dtype))
@@ -449,7 +587,10 @@ def mamba_apply(params, xn: jax.Array, cfg: ModelConfig, *,
 
 
 def mamba_step(params, xn: jax.Array, state: Dict, cfg: ModelConfig, *,
-               pre: Optional[Dict] = None) -> Tuple[jax.Array, Dict]:
+               pre: Optional[Dict] = None,
+               n_valid: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+    """Decode step. T == 1 classic, or a (B,T) chunk when ``n_valid`` given."""
     if pre is None:
         pre = mamba_preproj(params, xn)
-    return _mamba_core(params, pre, state, cfg, single_step=True)
+    return _mamba_core(params, pre, state, cfg,
+                       single_step=n_valid is None, n_valid=n_valid)

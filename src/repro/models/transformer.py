@@ -321,8 +321,9 @@ def backbone_decode(params, h: jax.Array, states: Dict, pos: jax.Array,
                     rules=None, n_valid: Optional[jax.Array] = None,
                     rope_applied: bool = False) -> Tuple[jax.Array, Dict]:
     """``n_valid is None``: classic one-token step (h is (B,1,d)).
-    With ``n_valid`` (B,): chunked step — h is (B,T,d), every layer writes
-    its chunk of K/V in one call (attention kinds only).
+    With ``n_valid`` (B,): chunked step — h is (B,T,d); attention layers
+    (incl. MLA) write their chunk of K/V (or latents) in one call, recurrent
+    layers scan the chunk with masked state commits. Every kind supports it.
     """
     plan = layer_plan(cfg)
     new_states: Dict[str, Any] = {}
@@ -379,16 +380,6 @@ def prime_meta_states(params, states: Dict, cfg: ModelConfig,
     return states
 
 
-def supports_chunked_decode(cfg: ModelConfig) -> bool:
-    """Chunked (T>1) decode covers the attention families; recurrent /
-    hybrid / MLA layers still step token-by-token."""
-    if cfg.arch_class == 'audio':
-        return False
-    from repro.models.blocks import ATTN_KINDS
-    plan = layer_plan(cfg)
-    return all(k in ATTN_KINDS for k in plan.kinds) and not cfg.mla
-
-
 def lm_decode_step(params, tokens: jax.Array, states: Dict, pos: jax.Array,
                    cfg: ModelConfig, *, precomputed=None, rules=None,
                    n_valid: Optional[jax.Array] = None,
@@ -398,10 +389,11 @@ def lm_decode_step(params, tokens: jax.Array, states: Dict, pos: jax.Array,
     """tokens (B,T), pos (B,) -> (logits (B,T,V), new states).
 
     ``n_valid is None`` is the classic one-token step (T == 1). With
-    ``n_valid`` (B,) the whole T-token chunk advances in one call: slot b's
+    ``n_valid`` (B,) the whole T-token chunk advances in one call — for
+    EVERY architecture kind (attention, MLA, mLSTM/sLSTM, hybrid): slot b's
     tokens sit at positions ``pos[b] .. pos[b] + n_valid[b] - 1``; lanes
-    beyond ``n_valid`` are padding (computed but never written to the cache,
-    their logits are garbage).
+    beyond ``n_valid`` are padding (computed but never committed to caches
+    or recurrent states, their logits are garbage).
 
     With ``precomputed``, the embedding read + layer-0 projections collapse to
     one row gather — the paper's decode-time win, amortised over the chunk.

@@ -4,18 +4,27 @@ The engine schedules **mixed steps** over a fixed set of slots. Decoding
 slots consume one (sampled) token per step; prefilling slots consume up to
 ``chunk_size`` prompt tokens at once through the chunked decode path
 (``Model.decode_step`` with ``n_valid``), which writes a whole chunk of K/V
-per layer in a single call. A 512-token prompt therefore costs
+(or MLA latents) per layer in a single call and scans recurrent states with
+masked commits. A 512-token prompt therefore costs
 ``ceil(512 / chunk_size)`` jit'd dispatches instead of 512 — the
 time-to-first-token win measured by ``benchmarks/serving_throughput.py``.
 When every occupied slot is decoding, the engine falls back to the
-single-token step (a separately compiled, narrower program). Chunking is
-enabled per-architecture via ``Model.supports_chunked_decode`` (attention
-families; recurrent/hybrid/MLA stacks step token-by-token).
+single-token step (a separately compiled, narrower program). Chunking works
+for EVERY architecture kind — dense/GQA, MoE, MLA, mLSTM/sLSTM, hybrid,
+VLM-text — with bit-identical-to-token-by-token semantics (audio enc-dec
+decode is driven by its own API and stays one token per step).
 
 Finished slots are freed and refilled from the queue — no head-of-line
 blocking. Slot reuse runs a pre-jitted per-slot indexed reset (one
 ``dynamic_update_slice`` per state leaf) instead of rebuilding the state
 tree host-side.
+
+Logits-on-demand (prompt scoring): a request submitted with
+``return_logits=True`` gets ``prompt_logits`` filled with the all-position
+logits of its prompt — row ``i`` is the next-token distribution after
+consuming ``prompt[i]`` — reusing the same chunk path with the lm_head run
+on every valid lane instead of the last one. :meth:`ServingEngine.score`
+wraps this for a batch of prompts.
 
 THE PAPER lives here: constructing the engine with ``precomputed=`` makes
 every step's embedding-read + layer-0 projections a single row gather per
@@ -47,12 +56,16 @@ class Request:
     max_new_tokens: int = 32
     temperature: float = 0.0
     eos_id: Optional[int] = None
+    return_logits: bool = False           # collect all-position prompt logits
     # filled by the engine:
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     submit_t: float = 0.0
     first_token_t: float = 0.0
     finish_t: float = 0.0
+    prompt_logits: Optional[np.ndarray] = None    # (P, V) if return_logits
+    _logit_chunks: List[np.ndarray] = dataclasses.field(default_factory=list,
+                                                        repr=False)
 
 
 class ServingEngine:
@@ -63,11 +76,27 @@ class ServingEngine:
         self.model, self.params = model, params
         self.max_slots, self.max_seq = max_slots, max_seq
         self.precomputed = precomputed
-        if chunk_size > 1 and not model.supports_chunked_decode():
-            chunk_size = 1
+        if model.cfg.arch_class == 'audio':
+            chunk_size = 1   # enc-dec decode is one token per step by API
+        from repro.models.blocks import ATTN_KINDS
+        from repro.models.transformer import layer_plan
+        kind0 = layer_plan(model.cfg).kinds[0]
         if fused_gather_rope and (precomputed is None or chunk_size == 1
-                                  or model.cfg.pos != 'rope'):
-            fused_gather_rope = False
+                                  or model.cfg.pos != 'rope'
+                                  or model.cfg.mla is not None
+                                  or kind0 not in ATTN_KINDS):
+            fused_gather_rope = False   # kernel needs a flat q/k row layout
+        if fused_gather_rope:
+            # pad the table's row width to the kernel's 128-lane alignment
+            # ONCE — otherwise ops.gather_rope_rows re-pads (copies) the
+            # whole table inside every jit'd chunk dispatch. split() reads
+            # only the layout's widths, so trailing pad columns are inert.
+            pad = (-precomputed.table.shape[1]) % 128
+            if pad:
+                precomputed = dataclasses.replace(
+                    precomputed,
+                    table=jnp.pad(precomputed.table, ((0, 0), (0, pad))))
+            self.precomputed = precomputed
         self.chunk_size = chunk_size
         self.fused_gather_rope = fused_gather_rope
         self.states = model.make_states(max_slots, max_seq, dtype,
@@ -97,7 +126,15 @@ class ServingEngine:
 
         self._step = jax.jit(step, donate_argnums=1)
 
-        def chunk_step(params, states, tokens, pos, n_valid, key, temps):
+        def step_logits(params, states, tokens, pos, key, temps):
+            logits, states = model.decode_step(
+                params, tokens, states, pos, precomputed=precomputed)
+            nxt = sample_tokens(logits[:, 0], key, temps)
+            return states, nxt, logits                            # (B,1,V)
+
+        self._step_logits = jax.jit(step_logits, donate_argnums=1)
+
+        def chunk_hidden(params, states, tokens, pos, n_valid, key, temps):
             h, states = model.decode_step(
                 params, tokens, states, pos, precomputed=precomputed,
                 n_valid=n_valid, return_hidden=True,
@@ -107,9 +144,26 @@ class ServingEngine:
             h_last = jnp.take_along_axis(h, idx, axis=1)          # (B,1,d)
             logits = lm_logits(params, h_last, model.cfg)
             nxt = sample_tokens(logits[:, 0], key, temps)
+            return h, states, nxt
+
+        def chunk_step(params, states, tokens, pos, n_valid, key, temps):
+            _, states, nxt = chunk_hidden(params, states, tokens, pos,
+                                          n_valid, key, temps)
             return states, nxt
 
+        def chunk_step_logits(params, states, tokens, pos, n_valid, key,
+                              temps):
+            # logits-on-demand: same sampled-token program as chunk_step
+            # (last-valid-lane head), plus the lm_head on EVERY lane for
+            # prompt scoring — padding lanes (t >= n_valid) are garbage and
+            # dropped host-side.
+            h, states, nxt = chunk_hidden(params, states, tokens, pos,
+                                          n_valid, key, temps)
+            return states, nxt, lm_logits(params, h, model.cfg)   # (B,T,V)
+
         self._chunk_step = jax.jit(chunk_step, donate_argnums=1) \
+            if chunk_size > 1 else None
+        self._chunk_step_logits = jax.jit(chunk_step_logits, donate_argnums=1) \
             if chunk_size > 1 else None
 
         def reset(states, fresh, slot):
@@ -161,12 +215,20 @@ class ServingEngine:
         prefilling = self.chunk_size > 1 and any(
             len(self.slot_req[s].prompt) - self._progress(s) > 1
             for s in active)
+        # logits-on-demand: any scoring request still consuming its prompt
+        # switches this step to the (separately compiled) logits-returning
+        # program; steps without scoring work keep the narrow fast path.
+        want_logits = any(
+            self.slot_req[s].return_logits
+            and self._progress(s) < len(self.slot_req[s].prompt)
+            for s in active)
         temps = jnp.asarray([
             (self.slot_req[s].temperature if self.slot_req[s] else 0.0)
             for s in range(self.max_slots)], jnp.float32)
         pos = jnp.asarray(self.slot_pos.astype(np.int32))
         self.key, sub = jax.random.split(self.key)
 
+        logits = None
         if prefilling:
             T = self.chunk_size
             tokens = np.zeros((self.max_slots, T), np.int32)
@@ -181,22 +243,39 @@ class ServingEngine:
                 else:                                # decoding slot: 1 token
                     tokens[s, 0] = self.slot_next_tok[s]
                     n_valid[s] = 1
-            self.states, nxt = self._chunk_step(
-                self.params, self.states, jnp.asarray(tokens), pos,
-                jnp.asarray(n_valid), sub, temps)
+            args = (self.params, self.states, jnp.asarray(tokens), pos,
+                    jnp.asarray(n_valid), sub, temps)
+            if want_logits:
+                self.states, nxt, logits = self._chunk_step_logits(*args)
+            else:
+                self.states, nxt = self._chunk_step(*args)
             consumed = n_valid
         else:
             tokens = jnp.asarray(self.slot_next_tok[:, None])
-            self.states, nxt = self._step(
-                self.params, self.states, tokens, pos, sub, temps)
+            args = (self.params, self.states, tokens, pos, sub, temps)
+            if want_logits:
+                self.states, nxt, logits = self._step_logits(*args)
+            else:
+                self.states, nxt = self._step(*args)
             consumed = np.ones(self.max_slots, np.int32)
 
         nxt = np.asarray(nxt)
+        if logits is not None:
+            logits = np.asarray(logits)
         self.steps += 1
         for s in active:
             req = self.slot_req[s]
+            p_before = self._progress(s)
             self.slot_pos[s] += int(consumed[s])
             p = self._progress(s)                    # progress within request
+            if req.return_logits and p_before < len(req.prompt):
+                # lanes 0..consumed-1 hold logits for prompt[p_before..p-1];
+                # copy so the slice doesn't pin the whole step's (B,T,V)
+                # array in memory for the rest of the prefill
+                req._logit_chunks.append(logits[s, :int(consumed[s])].copy())
+                if p >= len(req.prompt):
+                    req.prompt_logits = np.concatenate(req._logit_chunks, 0)
+                    req._logit_chunks = []
             if p < len(req.prompt):                  # still prefilling
                 self.slot_next_tok[s] = int(req.prompt[p])
                 continue
@@ -217,6 +296,22 @@ class ServingEngine:
                 and it < max_iters:
             self.step_once()
             it += 1
+
+    def score(self, prompts: List[np.ndarray]) -> List[np.ndarray]:
+        """Logits-on-demand for prompt-scoring workloads: run each prompt
+        through the (chunked) prefill path and return its all-position
+        logits — ``out[i][t]`` is the next-token distribution after
+        consuming ``prompts[i][t]``, so
+        ``log_softmax(out[i][t - 1])[prompts[i][t]]`` scores token ``t``.
+        Shares slots/steps with any concurrently queued generation work.
+        """
+        reqs = [Request(uid=-1 - i, prompt=np.asarray(p, np.int32),
+                        max_new_tokens=1, return_logits=True)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            self.submit(r)
+        self.run()
+        return [r.prompt_logits for r in reqs]
 
     # ------------------------------------------------------------- metrics
     def stats(self, requests: List[Request]) -> Dict[str, float]:

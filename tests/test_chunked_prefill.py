@@ -133,7 +133,11 @@ def test_cache_update_chunk_matches_sequential_ring_wrap():
                                       np.asarray(seq[nm]), err_msg=nm)
 
 
-def test_unsupported_arch_rejects_chunk_and_engine_falls_back():
+def test_recurrent_arch_chunks_no_fallback():
+    """Chunked prefill is universal: the engine keeps chunk_size for a
+    recurrent (xLSTM) stack — the per-architecture fallback (the old
+    ``Model.supports_chunked_decode`` gate) is gone. Full cross-arch
+    bit-identity coverage lives in test_chunked_all_archs.py."""
     from repro.config import SSMConfig
     cfg = ModelConfig(name='t-xlstm', arch_class='ssm', num_layers=2,
                       d_model=32, num_heads=4, num_kv_heads=4, head_dim=8,
@@ -143,10 +147,10 @@ def test_unsupported_arch_rejects_chunk_and_engine_falls_back():
                       ssm=SSMConfig(conv_kernel=4, expand=2,
                                     num_ssm_heads=4))
     model = Model(cfg)
-    assert not model.supports_chunked_decode()
+    assert not hasattr(model, 'supports_chunked_decode')
     params = model.init(jax.random.PRNGKey(0))
     eng = ServingEngine(model, params, max_slots=1, max_seq=32, chunk_size=8)
-    assert eng.chunk_size == 1            # silently steps token-by-token
+    assert eng.chunk_size == 8            # chunking sticks for SSM stacks
     r = Request(uid=0, prompt=np.arange(4) + 3, max_new_tokens=3)
     eng.submit(r)
     eng.run()
