@@ -36,4 +36,30 @@ def bench_kernels() -> List[Tuple[str, float, str]]:
                wv)
     rows.append(('kernel/rmsnorm_qkv_ref_us', t_ref,
                  'fused-norm+qkv oracle (the work precompute removes)'))
+
+    # fused gather->RoPE (the opt-in serving fast path) vs its unfused
+    # oracle — a [x|q|k|v] table row layout like the serving engine's.
+    # On CPU the Pallas kernel runs in interpret mode, so only the oracle
+    # number is hardware-meaningful here; on TPU this row is the kernel's
+    # first real measurement (ROADMAP open item).
+    d, H, KV, hd = 256, 8, 2, 32
+    q_w, kv_w = H * hd, KV * hd
+    W = d + q_w + 2 * kv_w
+    table = jax.random.normal(jax.random.PRNGKey(6), (4096, W))
+    ids = jax.random.randint(jax.random.PRNGKey(7), (4, 16), 0, 4096)
+    pos = jnp.broadcast_to(jnp.arange(16, dtype=jnp.int32)[None], (4, 16))
+    segs = ((d, H, hd), (d + q_w, KV, hd))
+    kw = dict(q_off=d, num_heads=H, k_off=d + q_w, num_kv_heads=KV,
+              head_dim=hd, theta=10_000.0)
+    t_fused = _t(jax.jit(lambda t, i, p: ops.gather_rope_rows(t, i, p, **kw)),
+                 table, ids, pos)
+    t_unf = _t(jax.jit(lambda t, i, p: ref.gather_rope_ref(
+        t, i.reshape(-1), p.reshape(-1), segs=segs, theta=10_000.0)),
+        table, ids, pos)
+    rows.append(('kernel/gather_rope_fused_us', t_fused,
+                 f'Pallas gather+RoPE, 64 rows W={W} '
+                 f'({"interpret" if jax.default_backend() != "tpu" else "compiled"})'))
+    rows.append(('kernel/gather_rope_unfused_us', t_unf,
+                 f'jnp take+rope oracle, speedup='
+                 f'{t_unf / max(t_fused, 1e-9):.2f}x'))
     return rows

@@ -36,9 +36,10 @@ def main() -> None:
     section(bench_savings_vs_depth, 'savings_bound')
 
     from benchmarks.serving_throughput import bench_serving, \
-        bench_serving_prompt_heavy
+        bench_serving_prompt_heavy, bench_shared_prefix
     section(bench_serving, 'serving')
     section(bench_serving_prompt_heavy, 'serving_prompt_heavy')
+    section(bench_shared_prefix, 'serving_shared_prefix')
 
     from benchmarks.kernel_micro import bench_kernels
     section(bench_kernels, 'kernels')

@@ -38,6 +38,21 @@ def main() -> None:
                     help='logits-on-demand demo: score each prompt (mean '
                          'token logprob over all positions) instead of '
                          'generating')
+    ap.add_argument('--prefix-cache', action='store_true',
+                    help='paged KV pool + shared-prefix radix cache: '
+                         'requests sharing a cached prompt prefix attach '
+                         'its pages and skip that prefill work (token '
+                         'outputs stay bit-identical to the dense engine)')
+    ap.add_argument('--page-size', type=int, default=16,
+                    help='tokens per KV page (prefix-cache mode; must '
+                         'divide --max-seq)')
+    ap.add_argument('--num-pages', type=int, default=0,
+                    help='KV pool size in pages (0 = auto: slots + cache '
+                         'headroom)')
+    ap.add_argument('--shared-prefix', type=int, default=0,
+                    help='prepend a common system prompt of this many '
+                         'tokens to every request (demonstrates the '
+                         'prefix-cache hit rate)')
     ap.add_argument('--seed', type=int, default=0)
     args = ap.parse_args()
 
@@ -56,11 +71,19 @@ def main() -> None:
     eng = ServingEngine(model, params, max_slots=args.slots,
                         max_seq=args.max_seq, precomputed=table,
                         seed=args.seed, chunk_size=args.chunk_size,
-                        fused_gather_rope=args.fused_gather_rope)
+                        fused_gather_rope=args.fused_gather_rope,
+                        prefix_cache=args.prefix_cache,
+                        page_size=args.page_size,
+                        num_pages=args.num_pages or None)
     if eng.chunk_size > 1:
         print(f'chunked prefill: {eng.chunk_size} tokens/dispatch'
               + (' + fused gather→RoPE' if eng.fused_gather_rope else ''))
+    if eng.paged:
+        print(f'paged KV: {eng.num_pages} pages x {eng.page_size} tokens '
+              f'+ shared-prefix radix cache')
     rng = np.random.default_rng(args.seed)
+    sys_prompt = rng.integers(3, cfg.vocab_size, size=args.shared_prefix) \
+        if args.shared_prefix else None
     if args.score:
         prompts = [rng.integers(3, cfg.vocab_size,
                                 size=int(rng.integers(4, 12)))
@@ -78,9 +101,11 @@ def main() -> None:
         toks = sum(len(p) for p in prompts)
         print(f'scored {len(prompts)} prompts ({toks} tokens) in {dt:.2f}s')
         return
-    reqs = [Request(uid=i,
-                    prompt=rng.integers(3, cfg.vocab_size,
-                                        size=int(rng.integers(4, 12))),
+    def mkprompt():
+        p = rng.integers(3, cfg.vocab_size, size=int(rng.integers(4, 12)))
+        return p if sys_prompt is None else np.concatenate([sys_prompt, p])
+
+    reqs = [Request(uid=i, prompt=mkprompt(),
                     max_new_tokens=args.new_tokens,
                     temperature=args.temperature)
             for i in range(args.requests)]
@@ -96,7 +121,15 @@ def main() -> None:
           f'(mode={"precompute" if table is not None else "baseline"})')
     print(f'mean latency {stats["mean_latency_s"]:.3f}s, '
           f'mean TTFT {stats["mean_ttft_s"]:.3f}s, '
-          f'engine steps {stats["engine_steps"]}')
+          f'engine steps {stats["engine_steps"]}, '
+          f'MoE token drops {stats["moe_token_drops"]}')
+    if eng.paged:
+        print(f'prefix cache: hit rate {stats["prefix_hit_rate"]:.2f} '
+              f'({stats["prefix_hits"]} hits / {stats["prefix_misses"]} '
+              f'misses, {stats["prefix_hit_tokens"]} tokens served from '
+              f'cache), TTFT on hit {stats["mean_ttft_on_hit_s"]:.3f}s, '
+              f'{stats["pages_in_use"]} pages in use, '
+              f'{stats["evictions"]} evictions')
 
 
 if __name__ == '__main__':

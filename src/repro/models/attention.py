@@ -9,9 +9,20 @@ Three entry points matter for the paper:
   ring-buffer cache of length ``min(window, seq)`` so long_500k decode fits.
 
 Layer-0-with-precompute calls ``attention_core`` directly on gathered q/k/v.
+
+Paged mode (shared-prefix serving): :func:`make_paged_cache` replaces the
+per-slot ``(B, Sc, ...)`` cache with a global page pool
+``(num_pages, page_size, ...)`` addressed through per-slot
+:class:`PageTables`; :func:`paged_update_chunk` scatters a chunk's K/V into
+the mapped pages and :func:`paged_view` gathers a slot-indexed virtual
+``(B, Sc, ...)`` cache back out, so the attend path (and therefore its
+rounding) is *exactly* the dense one — the bit-identity contract extends to
+paged serving. Policy (which pages a slot owns, prefix sharing, eviction)
+lives host-side in ``repro.serving.kvpool``.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -392,6 +403,150 @@ def cache_update_chunk(cache: Dict, k_new: jax.Array, v_new: jax.Array,
     return out
 
 
+# ================================================================== paged KV
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PageTables:
+    """Per-slot page tables for paged-KV serving.
+
+    ``pt`` (B, P_lin) maps linear position blocks of append-only layers
+    (full-causal attention, MLA latents): position ``p`` lives in physical
+    page ``pt[b, p // page_size]``. ``rt`` (B, P_ring) maps the ring blocks
+    of sliding-window layers: ring slot ``p % sc_ring`` lives in page
+    ``rt[b, (p % sc_ring) // page_size]``. Physical page 0 is the null page
+    (all-zero K/V, pos == -1) — unallocated table entries point at it so
+    gathers are always in-bounds and masked out by position validity.
+    ``sc_ring`` is static (it sets trace shapes).
+    """
+    pt: jax.Array
+    rt: jax.Array
+    sc_ring: int
+
+    def tree_flatten(self):
+        return (self.pt, self.rt), (self.sc_ring,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+    def table_for(self, window: int, page_size: int
+                  ) -> Tuple[jax.Array, int]:
+        """(table, virtual cache length) for a layer of the given window."""
+        if window and self.sc_ring:
+            return self.rt, self.sc_ring
+        return self.pt, self.pt.shape[1] * page_size
+
+
+def make_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int, *,
+                     dtype=jnp.bfloat16, quant: bool = False
+                     ) -> Dict[str, jax.Array]:
+    """Pool-shaped KV storage: same leaves as :func:`make_cache`, but the
+    leading axes are (num_pages, page_size) instead of (batch, Sc). Page 0
+    is the null page and must stay in this freshly-initialised state."""
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    cache = {
+        'k': jnp.zeros((num_pages, page_size, KV, hd),
+                       jnp.int8 if quant else dtype),
+        'v': jnp.zeros((num_pages, page_size, KV, hd),
+                       jnp.int8 if quant else dtype),
+        'pos': jnp.full((num_pages, page_size), -1, jnp.int32),
+    }
+    if quant:
+        cache['k_scale'] = jnp.zeros((num_pages, page_size, KV), jnp.bfloat16)
+        cache['v_scale'] = jnp.zeros((num_pages, page_size, KV), jnp.bfloat16)
+    return cache
+
+
+def paged_view(cache: Dict, table: jax.Array, Sc: int) -> Dict[str, jax.Array]:
+    """Gather a slot-indexed virtual ``(B, Sc, ...)`` cache out of the pool.
+
+    The virtual cache has exactly the dense cache's length and entry order
+    (position ``p`` — or ring slot ``p % Sc`` — at index ``p``), so feeding
+    it to :func:`decode_attend_chunk` issues bitwise the dense path's
+    contractions. Unallocated blocks resolve to the null page (pos == -1,
+    masked out).
+    """
+    B, P = table.shape
+    ps = next(iter(cache.values())).shape[1]
+
+    def g(leaf):
+        v = leaf[table]                                  # (B, P, ps, ...)
+        return v.reshape((B, P * ps) + leaf.shape[2:])[:, :Sc]
+
+    return {nm: g(leaf) for nm, leaf in cache.items()}
+
+
+def paged_scatter(cache: Dict, updates: Dict[str, jax.Array],
+                  pos0: jax.Array, n_valid: jax.Array, table: jax.Array,
+                  Sc: int) -> Dict[str, jax.Array]:
+    """Write a chunk's T lanes through a page table (ring-aware).
+
+    ``updates[name]`` is (B, T, ...) chunk values for pool leaf ``name``;
+    lane ``t < n_valid[b]`` of slot ``b`` lands at virtual index
+    ``(pos0[b] + t) % Sc`` → physical row ``table[b, idx // ps] * ps +
+    idx % ps``. Invalid lanes scatter out of bounds (dropped). Slots never
+    share writable pages and a chunk cannot lap the ring (the engine sizes
+    ``Sc >= chunk``), so targets are unique — the scatter is deterministic
+    and bitwise equal to the dense path's sequential writes. The 'pos'
+    leaf is maintained here.
+    """
+    any_upd = next(iter(updates.values()))
+    B, T = any_upd.shape[:2]
+    NP, ps = cache[next(iter(updates))].shape[:2]
+    assert T <= Sc, 'chunk must not lap the paged ring'
+    pos0 = pos0.astype(jnp.int32)
+    t = jnp.arange(T, dtype=jnp.int32)[None]
+    pos_t = pos0[:, None] + t                            # (B, T)
+    idx = pos_t % Sc
+    page = jnp.take_along_axis(table, idx // ps, axis=1)
+    flat = page * ps + idx % ps
+    valid = t < n_valid.astype(jnp.int32)[:, None]
+    flat = jnp.where(valid, flat, NP * ps).reshape(-1)   # OOB -> dropped
+
+    def scat(leaf, vals):
+        fl = leaf.reshape((NP * ps,) + leaf.shape[2:])
+        fl = fl.at[flat].set(
+            vals.reshape((B * T,) + vals.shape[2:]).astype(leaf.dtype),
+            mode='drop')
+        return fl.reshape(leaf.shape)
+
+    out = dict(cache)
+    for nm, vals in updates.items():
+        out[nm] = scat(cache[nm], vals)
+    out['pos'] = scat(cache['pos'], pos_t)
+    return out
+
+
+def paged_update_chunk(cache: Dict, k_new: jax.Array, v_new: jax.Array,
+                       pos0: jax.Array, n_valid: jax.Array,
+                       table: jax.Array, Sc: int) -> Dict[str, jax.Array]:
+    """Paged form of :func:`cache_update_chunk` (int8-quant compatible)."""
+    if 'k_scale' in cache:
+        kq, ks = _quantize(k_new)
+        vq, vs = _quantize(v_new)
+        upd = {'k': kq, 'v': vq, 'k_scale': ks, 'v_scale': vs}
+    else:
+        upd = {'k': k_new, 'v': v_new}
+    return paged_scatter(cache, upd, pos0, n_valid, table, Sc)
+
+
+def chunk_write_and_view(cache: Dict, k_h: jax.Array, v_h: jax.Array,
+                         pos0: jax.Array, n_valid: jax.Array, *,
+                         window: int, paged: Optional[PageTables]
+                         ) -> Tuple[Dict, Dict]:
+    """Chunk K/V write + the cache the queries should attend against:
+    (new stored cache, attend view). Dense mode: both are the updated
+    cache. Paged mode: the pool is scattered through the layer's table and
+    a dense-shaped virtual view is gathered back for the attend."""
+    if paged is None:
+        cache = cache_update_chunk(cache, k_h, v_h, pos0, n_valid)
+        return cache, cache
+    ps = cache['k'].shape[1]
+    table, Sc = paged.table_for(window, ps)
+    cache = paged_update_chunk(cache, k_h, v_h, pos0, n_valid, table, Sc)
+    return cache, paged_view(cache, table, Sc)
+
+
 # ================================================================ decode core
 def decode_attend(q: jax.Array, cache: Dict, pos: jax.Array, cfg: ModelConfig,
                   *, rope_theta, window: int = 0) -> jax.Array:
@@ -496,12 +651,15 @@ def decode_attend_chunk(q: jax.Array, cache: Dict, pos0: jax.Array,
 def decode_chunk(params, x_normed: Optional[jax.Array], cache: Dict,
                  pos0: jax.Array, n_valid: jax.Array, cfg: ModelConfig, *,
                  rope_theta, window: int = 0, qkv: Optional[Tuple] = None,
-                 rope_applied: bool = False) -> Tuple[jax.Array, Dict]:
+                 rope_applied: bool = False,
+                 paged: Optional[PageTables] = None) -> Tuple[jax.Array, Dict]:
     """Chunked-prefill step: project (or take precomputed) a T-token chunk,
     write the valid prefix into the cache in one call, attend all T queries.
 
     ``qkv`` supplies gathered (q,k,v) rows (B,T,·) for the paper's layer-0
     path; ``rope_applied`` marks them as already rotated by the fused kernel.
+    ``paged`` switches the cache to the page-pool addressing mode (the
+    attend itself runs on a dense-shaped gathered view — same rounding).
     """
     if qkv is None:
         q, k, v = compute_qkv(params, x_normed, cfg)
@@ -514,9 +672,12 @@ def decode_chunk(params, x_normed: Optional[jax.Array], cache: Dict,
             + jnp.arange(T, dtype=jnp.int32)
         k_h = L.apply_rope(k_h, pos_t, rope_theta)
     v_h = v.reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
-    cache = cache_update_chunk(cache, k_h, v_h, pos0, n_valid)
-    ctx = decode_attend_chunk(q, cache, pos0, cfg, rope_theta=rope_theta,
-                              window=window, rope_applied=rope_applied)
+    cache, attend_cache = chunk_write_and_view(cache, k_h, v_h, pos0,
+                                               n_valid, window=window,
+                                               paged=paged)
+    ctx = decode_attend_chunk(q, attend_cache, pos0, cfg,
+                              rope_theta=rope_theta, window=window,
+                              rope_applied=rope_applied)
     return L.dense(params['wo'], ctx), cache
 
 

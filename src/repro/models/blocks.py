@@ -105,8 +105,8 @@ def block_preproj(params, x: jax.Array, cfg: ModelConfig, kind: str,
             # parallel MoE (hypothetical parallel Mixtral, paper §3): the
             # expert FFN is token-wise deterministic -> precomputable too.
             xn2 = L.norm_apply(params['ln2'], x, cfg.norm)
-            y, _ = moe_apply(params['moe'], xn2[None] if xn2.ndim == 2 else xn2,
-                             cfg)
+            y, _, _ = moe_apply(params['moe'],
+                                xn2[None] if xn2.ndim == 2 else xn2, cfg)
             y = y[0] if xn2.ndim == 2 else y
             return {'s': x + y, 'q': q, 'k': k, 'v': v}
         return {'x': x, 'q': q, 'k': k, 'v': v}
@@ -177,7 +177,7 @@ def block_apply_full(params, h: jax.Array, positions: jax.Array,
                                         rope_theta=theta, window=window)
             xn2 = L.norm_apply(params['ln2'], h, cfg.norm)
             if use_moe:
-                f, aux = moe_apply(params['moe'], xn2, cfg)
+                f, aux, _ = moe_apply(params['moe'], xn2, cfg)
             else:
                 f = ffn_apply(params['ffn'], xn2, act=cfg.act)
             return h + attn_out + f, aux
@@ -203,10 +203,9 @@ def block_apply_full(params, h: jax.Array, positions: jax.Array,
         h = h + attn_out
         xn2 = L.norm_apply(params['ln2'], h, cfg.norm)
         if use_moe:
-            f, aux = moe_apply(params['moe'], xn2, cfg,
-                               router_mode='softmax_topk' if cfg.moe.num_shared
-                               else 'topk_softmax')
-            f = f
+            f, aux, _ = moe_apply(params['moe'], xn2, cfg,
+                                  router_mode='softmax_topk'
+                                  if cfg.moe.num_shared else 'topk_softmax')
         else:
             f = ffn_apply(params['ffn'], xn2, act=cfg.act)
         return h + f, aux
@@ -254,22 +253,64 @@ def block_apply_full(params, h: jax.Array, positions: jax.Array,
 # ===================================================================== state
 def block_make_state(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
                      dtype=jnp.bfloat16, quant: bool = False,
-                     chunk: int = 1) -> Dict:
+                     chunk: int = 1, num_pages: int = 0,
+                     page_size: int = 0) -> Dict:
+    """``num_pages > 0`` builds paged-KV storage for the attention caches
+    (global page pool instead of per-slot caches); recurrent / conv state
+    keeps its per-slot batch layout either way."""
     if kind in ATTN_KINDS:
         if cfg.mla:
+            if num_pages:
+                return M.mla_make_paged_cache(cfg, num_pages, page_size,
+                                              dtype)
             return M.mla_make_cache(cfg, batch, seq_len, dtype)
+        if num_pages:
+            return A.make_paged_cache(cfg, num_pages, page_size, dtype=dtype,
+                                      quant=quant)
         return A.make_cache(cfg, batch, seq_len,
                             window=kind_window(cfg, kind), dtype=dtype,
                             quant=quant, chunk=chunk)
     if kind in HYBRID_KINDS:
-        return {'attn': A.make_cache(cfg, batch, seq_len,
-                                     window=kind_window(cfg, kind),
-                                     dtype=dtype, quant=quant, chunk=chunk),
-                'ssm': S.mamba_init_state(cfg, batch)}
+        if num_pages:
+            attn = A.make_paged_cache(cfg, num_pages, page_size, dtype=dtype,
+                                      quant=quant)
+        else:
+            attn = A.make_cache(cfg, batch, seq_len,
+                                window=kind_window(cfg, kind), dtype=dtype,
+                                quant=quant, chunk=chunk)
+        return {'attn': attn, 'ssm': S.mamba_init_state(cfg, batch)}
     if kind == 'mlstm':
         return S.mlstm_init_state(cfg, batch)
     if kind == 'slstm':
         return S.slstm_init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def block_paged_mask(cfg: ModelConfig, kind: str, quant: bool = False):
+    """Same tree structure as :func:`block_make_state`, bool leaves: True
+    for page-pool leaves (no batch axis — shared, never slot-reset), False
+    for per-slot state (reset / snapshot / restore by slot row)."""
+    def no(tree):
+        return jax.tree_util.tree_map(lambda _: False, tree)
+
+    if kind in ATTN_KINDS:
+        if cfg.mla:
+            return {'ckv': True, 'kpe': True, 'pos': True}
+        m = {'k': True, 'v': True, 'pos': True}
+        if quant:
+            m.update(k_scale=True, v_scale=True)
+        return m
+    if kind in HYBRID_KINDS:
+        m = {'k': True, 'v': True, 'pos': True}
+        if quant:
+            m.update(k_scale=True, v_scale=True)
+        return {'attn': m,
+                'ssm': no(jax.eval_shape(
+                    lambda: S.mamba_init_state(cfg, 1)))}
+    if kind == 'mlstm':
+        return no(jax.eval_shape(lambda: S.mlstm_init_state(cfg, 1)))
+    if kind == 'slstm':
+        return no(jax.eval_shape(lambda: S.slstm_init_state(cfg, 1)))
     raise ValueError(kind)
 
 
@@ -312,9 +353,12 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
                  cfg: ModelConfig, kind: str, use_moe: bool, *,
                  pre: Optional[Dict] = None,
                  n_valid: Optional[jax.Array] = None,
-                 rope_applied: bool = False
-                 ) -> Tuple[jax.Array, Dict]:
-    """Decode step. h: (B,T,d); pos: (B,) start positions. -> (h_out, state).
+                 rope_applied: bool = False,
+                 paged: Optional[A.PageTables] = None,
+                 lane_valid: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, Dict, jax.Array]:
+    """Decode step. h: (B,T,d); pos: (B,) start positions.
+    -> (h_out, state, moe_dropped_token_slots).
 
     ``n_valid is None`` is the classic one-token step (T == 1). Passing
     ``n_valid`` (B,) switches to the chunked-prefill path — every kind
@@ -325,16 +369,32 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
     (see ssm.masked_chunk_scan). Norms and FFN/MoE are token-wise, so the
     surrounding code is shared. Both paths are bit-identical to T
     sequential one-token steps on the valid lanes.
+
+    ``paged`` switches the attention caches to page-pool addressing
+    (chunked path only). ``lane_valid`` (B,) marks live slots in the
+    one-token step so MoE routing can exclude free-slot lanes; the chunked
+    path derives its lane mask from ``n_valid``.
     """
     theta = kind_theta(cfg, kind)
     window = kind_window(cfg, kind)
     chunked = n_valid is not None
+    assert paged is None or chunked, 'paged decode runs the chunked path'
+    if chunked:
+        T = h.shape[1]
+        lane_mask = jnp.arange(T, dtype=jnp.int32)[None] \
+            < n_valid.astype(jnp.int32)[:, None]
+    elif lane_valid is not None:
+        lane_mask = lane_valid[:, None]
+    else:
+        lane_mask = None
+    zero = jnp.zeros((), jnp.int32)
 
     def attend(xn, qkv):
         if chunked:
             return A.decode_chunk(params['attn'], xn, state, pos, n_valid,
                                   cfg, rope_theta=theta, window=window,
-                                  qkv=qkv, rope_applied=rope_applied)
+                                  qkv=qkv, rope_applied=rope_applied,
+                                  paged=paged)
         return A.decode_step(params['attn'], xn, state, pos, cfg,
                              rope_theta=theta, window=window, qkv=qkv)
 
@@ -342,7 +402,7 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
         if chunked:
             return M.mla_decode_chunk(params['attn'], xn, state, pos,
                                       n_valid, cfg, rope_theta=theta,
-                                      latents=latents)
+                                      latents=latents, paged=paged)
         return M.mla_decode_step(params['attn'], xn, state, pos, cfg,
                                  rope_theta=theta, latents=latents)
 
@@ -351,15 +411,16 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
             if pre is not None:
                 s, qkv = pre['s'], (pre['q'], pre['k'], pre['v'])
                 attn_out, state = attend(None, qkv)
-                return s + attn_out, state
+                return s + attn_out, state, zero
             xn = L.norm_apply(params['ln1'], h, cfg.norm)
             attn_out, state = attend(xn, None)
             xn2 = L.norm_apply(params['ln2'], h, cfg.norm)
             if use_moe:
-                f, _ = moe_apply(params['moe'], xn2, cfg)
+                f, _, drops = moe_apply(params['moe'], xn2, cfg,
+                                        lane_mask=lane_mask)
             else:
-                f = ffn_apply(params['ffn'], xn2, act=cfg.act)
-            return h + attn_out + f, state
+                f, drops = ffn_apply(params['ffn'], xn2, act=cfg.act), zero
+            return h + attn_out + f, state, drops
         # serial
         if pre is not None:
             if cfg.mla:
@@ -376,12 +437,13 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
         h = h + attn_out
         xn2 = L.norm_apply(params['ln2'], h, cfg.norm)
         if use_moe:
-            f, _ = moe_apply(params['moe'], xn2, cfg,
-                             router_mode='softmax_topk' if cfg.moe.num_shared
-                             else 'topk_softmax')
+            f, _, drops = moe_apply(params['moe'], xn2, cfg,
+                                    router_mode='softmax_topk'
+                                    if cfg.moe.num_shared else 'topk_softmax',
+                                    lane_mask=lane_mask)
         else:
-            f = ffn_apply(params['ffn'], xn2, act=cfg.act)
-        return h + f, state
+            f, drops = ffn_apply(params['ffn'], xn2, act=cfg.act), zero
+        return h + f, state, drops
 
     if kind in HYBRID_KINDS:
         if pre is not None:
@@ -401,10 +463,11 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
             k_h = L.apply_rope(k_h, pos_t, theta)
         v_h = v.reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
         if chunked:
-            acache = A.cache_update_chunk(state['attn'], k_h, v_h, pos,
-                                          n_valid)
-            ctx = A.decode_attend_chunk(q, acache, pos, cfg, rope_theta=theta,
-                                        window=window)
+            acache, attend_cache = A.chunk_write_and_view(
+                state['attn'], k_h, v_h, pos, n_valid, window=window,
+                paged=paged)
+            ctx = A.decode_attend_chunk(q, attend_cache, pos, cfg,
+                                        rope_theta=theta, window=window)
         else:
             acache = A.cache_update(state['attn'], k_h, v_h, pos)
             ctx = A.decode_attend(q, acache, pos, cfg, rope_theta=theta,
@@ -416,7 +479,7 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
         h = h + L.dense(params['w_out'], mix)
         xn2 = L.norm_apply(params['ln2'], h, cfg.norm)
         return h + ffn_apply(params['ffn'], xn2, act=cfg.act), \
-            {'attn': acache, 'ssm': sstate}
+            {'attn': acache, 'ssm': sstate}, zero
 
     if kind == 'mlstm':
         if pre is not None:
@@ -428,7 +491,7 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
             xn = L.norm_apply(params['ln1'], h, cfg.norm)
             y, state = S.mlstm_step(params['core'], xn, state, cfg,
                                     n_valid=n_valid)
-        return h + y, state
+        return h + y, state, zero
 
     if kind == 'slstm':
         xn = L.norm_apply(params['ln1'], h, cfg.norm)
@@ -439,5 +502,5 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
         else:
             y, state = S.slstm_step(params['core'], xn, state, cfg,
                                     n_valid=n_valid)
-        return h + y, state
+        return h + y, state, zero
     raise ValueError(kind)

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.models import layers as L
-from repro.models.attention import NEG_INF
+from repro.models.attention import NEG_INF, paged_scatter, paged_view
 from repro.models.layers import ParamSpec
 
 
@@ -182,6 +182,18 @@ def _mla_attend_lane(params, q_nope: jax.Array, q_pe: jax.Array, cache: Dict,
                       params['wuv'].astype(ctx_lat.dtype))
 
 
+def mla_make_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                         dtype=jnp.bfloat16) -> Dict:
+    """Pool-shaped latent cache for paged serving: same leaves as
+    :func:`mla_make_cache` with (num_pages, page_size) leading axes."""
+    m = cfg.mla
+    return {
+        'ckv': jnp.zeros((num_pages, page_size, m.kv_lora_rank), dtype),
+        'kpe': jnp.zeros((num_pages, page_size, m.qk_rope_dim), dtype),
+        'pos': jnp.full((num_pages, page_size), -1, jnp.int32),
+    }
+
+
 def mla_cache_update_chunk(cache: Dict, c_kv: jax.Array, k_pe_rot: jax.Array,
                            pos0: jax.Array, n_valid: jax.Array) -> Dict:
     """Whole-chunk latent cache write: lanes ``t < n_valid[b]`` land at ring
@@ -202,8 +214,8 @@ def mla_cache_update_chunk(cache: Dict, c_kv: jax.Array, k_pe_rot: jax.Array,
 
 def mla_decode_chunk(params, x_normed: Optional[jax.Array], cache: Dict,
                      pos0: jax.Array, n_valid: jax.Array, cfg: ModelConfig, *,
-                     rope_theta, latents: Optional[Tuple] = None
-                     ) -> Tuple[jax.Array, Dict]:
+                     rope_theta, latents: Optional[Tuple] = None,
+                     paged=None) -> Tuple[jax.Array, Dict]:
     """Absorbed-form chunked-prefill MLA: project (or take precomputed
     latents for) a whole (B,T) chunk, write the valid lanes' ``c_kv``/``k_pe``
     into the cache in one call, attend all T queries against it. Query lane
@@ -224,10 +236,18 @@ def mla_decode_chunk(params, x_normed: Optional[jax.Array], cache: Dict,
     B, T = q.shape[:2]
     pos_t = pos0[:, None].astype(jnp.int32) + jnp.arange(T, dtype=jnp.int32)
     k_pe_rot = L.apply_rope(k_pe[:, :, None, :], pos_t, rope_theta)[:, :, 0]
-    cache = mla_cache_update_chunk(cache, c_kv, k_pe_rot, pos0, n_valid)
+    if paged is None:
+        cache = mla_cache_update_chunk(cache, c_kv, k_pe_rot, pos0, n_valid)
+        attend_cache = cache
+    else:
+        # MLA layers are full-causal (append-only): always the linear table
+        table, Sc = paged.table_for(0, cache['ckv'].shape[1])
+        cache = paged_scatter(cache, {'ckv': c_kv, 'kpe': k_pe_rot}, pos0,
+                              n_valid, table, Sc)
+        attend_cache = paged_view(cache, table, Sc)
     q_nope, q_pe = _split_q(q, cfg)                   # (B,T,H,dn)/(B,T,H,dr)
     q_pe = L.apply_rope(q_pe, pos_t, rope_theta)
     ctx = jnp.stack([_mla_attend_lane(params, q_nope[:, t], q_pe[:, t],
-                                      cache, pos_t[:, t], cfg)
+                                      attend_cache, pos_t[:, t], cfg)
                      for t in range(T)], axis=1)      # (B,T,H,dv)
     return L.dense(params['wo'], ctx.reshape(B, T, -1)), cache

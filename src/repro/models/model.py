@@ -80,32 +80,55 @@ class Model:
     def decode_step(self, params, tokens: jax.Array, states, pos: jax.Array,
                     *, precomputed=None, rules=None, n_valid=None,
                     return_hidden: bool = False,
-                    fused_gather_rope: bool = False):
+                    fused_gather_rope: bool = False, paged=None,
+                    lane_valid=None, return_stats: bool = False):
         """tokens (B,T), pos (B,) -> (logits (B,T,V), new states).
 
         T == 1 with ``n_valid=None`` is the classic decode step. Passing
         ``n_valid`` (B,) runs the chunked-prefill fast path (see
         transformer.lm_decode_step) — supported by every architecture kind
         except audio (whose decode is driven by the enc-dec API).
+        ``paged`` (an ``attention.PageTables``) addresses the attention
+        caches through the serving engine's page pool; ``return_stats``
+        appends a stats dict (MoE token drops) to the return tuple.
         """
         c = self.cfg
         if c.arch_class == 'audio':
-            assert n_valid is None, 'audio decode is one token per step'
-            return E.encdec_decode_step(params, tokens, states, pos, c,
-                                        precomputed=precomputed)
+            assert n_valid is None and paged is None, \
+                'audio decode is one token per step, dense cache only'
+            logits, states = E.encdec_decode_step(params, tokens, states,
+                                                  pos, c,
+                                                  precomputed=precomputed)
+            if return_stats:        # no MoE in the enc-dec stack
+                return logits, states, {'moe_drops': jnp.zeros((),
+                                                               jnp.int32)}
+            return logits, states
         return T.lm_decode_step(params, tokens, states, pos, c,
                                 precomputed=precomputed, rules=rules,
                                 n_valid=n_valid, return_hidden=return_hidden,
-                                fused_gather_rope=fused_gather_rope)
+                                fused_gather_rope=fused_gather_rope,
+                                paged=paged, lane_valid=lane_valid,
+                                return_stats=return_stats)
 
     # ------------------------------------------------------------- states
     def make_states(self, batch: int, seq_len: int, dtype=jnp.bfloat16,
-                    kv_quant: bool = False, chunk: int = 1):
+                    kv_quant: bool = False, chunk: int = 1,
+                    num_pages: int = 0, page_size: int = 0):
+        """``num_pages > 0`` builds paged-KV storage: attention caches become
+        a global (num_pages, page_size, ...) pool addressed through page
+        tables; recurrent state keeps its per-slot layout."""
         c = self.cfg
         if c.arch_class == 'audio':
+            assert not num_pages, 'paged KV is not supported for audio'
             return E.encdec_make_states(c, batch, seq_len, dtype)
         return T.backbone_make_states(c, batch, seq_len, dtype, kv_quant,
-                                      chunk)
+                                      chunk, num_pages, page_size)
+
+    def paged_state_mask(self, kv_quant: bool = False):
+        """Bool tree matching paged ``make_states``: True on page-pool
+        leaves, False on per-slot state rows."""
+        assert self.cfg.arch_class != 'audio'
+        return T.backbone_paged_mask(self.cfg, kv_quant)
 
     def states_abstract(self, batch: int, seq_len: int, rules: Rules,
                         dtype=jnp.bfloat16, kv_quant: bool = False,

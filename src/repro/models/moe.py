@@ -69,39 +69,70 @@ def router_probs(logits: jax.Array, m: MoEConfig, mode: str
 
 
 def moe_apply(params, x: jax.Array, cfg: ModelConfig, *,
-              router_mode: str = 'topk_softmax'
-              ) -> Tuple[jax.Array, jax.Array]:
-    """x: (B,S,d) -> (y, aux_load_balance_loss)."""
+              router_mode: str = 'topk_softmax',
+              lane_mask: Optional[jax.Array] = None
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B,S,d) -> (y, aux_load_balance_loss, dropped_token_slots).
+
+    ``lane_mask`` (B,S) bool marks *real* tokens. Serving's chunked /
+    mixed steps contain padding lanes (t >= n_valid) and free-slot lanes;
+    routing them is not just wasted FLOPs — under expert overflow a
+    garbage lane sorted earlier could displace a real token from
+    ``capacity(N)``. Masked lanes are routed to a null expert id (== E)
+    which sorts last and scatters out of bounds, so they can never consume
+    capacity; their output rows are exactly zero. A real token's value is
+    independent of its capacity row, so masking is a no-op for outputs
+    whenever nothing overflows — the bit-identity contract holds.
+
+    ``dropped_token_slots`` counts (token, k)-routing slots of real tokens
+    that overflowed capacity this call — surfaced as
+    ``ServingEngine.stats()['moe_token_drops']``.
+    """
     m = cfg.moe
     B, S, d = x.shape
     N = B * S
     k, E = m.top_k, m.num_experts
     xf = x.reshape(N, d)
+    valid = None if lane_mask is None else lane_mask.reshape(N)
 
     logits = jnp.einsum('nd,de->ne', xf.astype(jnp.float32),
                         params['router'].astype(jnp.float32))
     w, idx = router_probs(logits, m, router_mode)              # (N,k)
 
-    # ---- load-balance aux loss (Switch-style) ----
-    p_mean = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=0)        # (E,)
-    frac = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(
-        1.0 / (N * k))
+    ef = idx.reshape(N * k)                                    # expert of each slot
+    if valid is not None:
+        vf = jnp.repeat(valid, k)
+        ef = jnp.where(vf, ef, E)                  # null expert: sorts last
+
+    # ---- load-balance aux loss (Switch-style; over real lanes only) ----
+    if valid is None:
+        p_mean = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=0)    # (E,)
+        frac = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(
+            1.0 / (N * k))
+    else:
+        nv = jnp.maximum(jnp.sum(valid.astype(jnp.float32)), 1.0)
+        p_mean = jnp.sum(jax.nn.softmax(logits, axis=-1)
+                         * valid[:, None].astype(jnp.float32), axis=0) / nv
+        frac = jnp.zeros((E,), jnp.float32).at[ef].add(
+            1.0 / (nv * k), mode='drop')           # ef == E dropped
     aux = E * jnp.sum(p_mean * frac)
 
     # ---- sort-based dispatch ----
     C = capacity(N, m)
-    ef = idx.reshape(N * k)                                    # expert of each slot
     wf = w.reshape(N * k).astype(x.dtype)
     tok = jnp.repeat(jnp.arange(N), k)
     order = jnp.argsort(ef, stable=True)
     e_s, t_s, w_s = ef[order], tok[order], wf[order]
-    counts = jnp.zeros((E,), jnp.int32).at[ef].add(1)
+    counts = jnp.zeros((E,), jnp.int32).at[ef].add(1, mode='drop')
     starts = jnp.cumsum(counts) - counts                       # exclusive cumsum
-    pos = jnp.arange(N * k, dtype=jnp.int32) - starts[e_s]     # pos within expert
-    pos = jnp.where(pos < C, pos, C)                           # overflow -> OOB drop
+    e_g = jnp.minimum(e_s, E - 1)                  # in-bounds gather index
+    pos = jnp.arange(N * k, dtype=jnp.int32) - starts[e_g]     # pos within expert
+    ok = e_s < E                                   # real-token slots
+    dropped = jnp.sum((ok & (pos >= C)).astype(jnp.int32))
+    pos = jnp.where(ok & (pos < C), pos, C)        # overflow/null -> OOB drop
 
     buf = jnp.zeros((E, C, d), x.dtype)
-    buf = buf.at[e_s, pos].set(xf[t_s], mode='drop')
+    buf = buf.at[e_g, pos].set(xf[t_s], mode='drop')
 
     # ---- per-expert SwiGLU ----
     up = jnp.einsum('ecd,edf->ecf', buf, params['w_up'])
@@ -110,13 +141,13 @@ def moe_apply(params, x: jax.Array, cfg: ModelConfig, *,
 
     # ---- combine ----
     pos_safe = jnp.minimum(pos, C - 1)
-    vals = y_e[e_s, pos_safe] * w_s[:, None]
+    vals = y_e[e_g, pos_safe] * w_s[:, None]
     vals = jnp.where((pos < C)[:, None], vals, 0)
     y = jnp.zeros((N, d), x.dtype).at[t_s].add(vals)
 
     if 'shared' in params:
         y = y + ffn_apply(params['shared'], xf, act='silu')
-    return y.reshape(B, S, d), aux
+    return y.reshape(B, S, d), aux, dropped
 
 
 def moe_num_weights(cfg: ModelConfig) -> int:

@@ -23,8 +23,9 @@ import jax.numpy as jnp
 from repro.config import ModelConfig
 from repro.models import layers as L
 from repro.models.blocks import (block_apply_full, block_decode,
-                                 block_make_state, block_schema,
-                                 block_state_abstract, preproj_layout)
+                                 block_make_state, block_paged_mask,
+                                 block_schema, block_state_abstract,
+                                 preproj_layout)
 from repro.models.layers import ParamSpec
 
 
@@ -255,25 +256,39 @@ def lm_apply(params, tokens: jax.Array, cfg: ModelConfig, *,
 # ==================================================================== decode
 def backbone_make_states(cfg: ModelConfig, batch: int, seq_len: int,
                          dtype=jnp.bfloat16, quant: bool = False,
-                         chunk: int = 1) -> Dict:
+                         chunk: int = 1, num_pages: int = 0,
+                         page_size: int = 0) -> Dict:
     plan = layer_plan(cfg)
-    st: Dict[str, Any] = {
-        'layer0': block_make_state(cfg, plan.kinds[0], batch, seq_len, dtype,
-                                   quant, chunk)}
+    mk = lambda kind: block_make_state(cfg, kind, batch, seq_len, dtype,
+                                       quant, chunk, num_pages, page_size)
+    st: Dict[str, Any] = {'layer0': mk(plan.kinds[0])}
     if plan.n_head:
-        st['head'] = [block_make_state(cfg, plan.kinds[1 + i], batch, seq_len,
-                                       dtype, quant, chunk)
-                      for i in range(plan.n_head)]
+        st['head'] = [mk(plan.kinds[1 + i]) for i in range(plan.n_head)]
     if plan.reps:
         st['body'] = [
             jax.tree_util.tree_map(
                 lambda x: jnp.broadcast_to(x[None], (plan.reps,) + x.shape)
-                .copy() if hasattr(x, 'shape') else x,
-                block_make_state(cfg, k, batch, seq_len, dtype, quant, chunk))
+                .copy() if hasattr(x, 'shape') else x, mk(k))
             for k in plan.slots]
     if plan.n_tail:
-        st['tail'] = [block_make_state(cfg, plan.slots[i], batch, seq_len,
-                                       dtype, quant, chunk)
+        st['tail'] = [mk(plan.slots[i]) for i in range(plan.n_tail)]
+    return st
+
+
+def backbone_paged_mask(cfg: ModelConfig, quant: bool = False) -> Dict:
+    """Bool tree matching :func:`backbone_make_states` (paged mode): True on
+    page-pool leaves, False on per-slot state — drives the engine's
+    slot-reset / snapshot / restore tree walks."""
+    plan = layer_plan(cfg)
+    st: Dict[str, Any] = {
+        'layer0': block_paged_mask(cfg, plan.kinds[0], quant)}
+    if plan.n_head:
+        st['head'] = [block_paged_mask(cfg, plan.kinds[1 + i], quant)
+                      for i in range(plan.n_head)]
+    if plan.reps:
+        st['body'] = [block_paged_mask(cfg, k, quant) for k in plan.slots]
+    if plan.n_tail:
+        st['tail'] = [block_paged_mask(cfg, plan.slots[i], quant)
                       for i in range(plan.n_tail)]
     return st
 
@@ -319,50 +334,62 @@ def backbone_states_abstract(cfg: ModelConfig, batch: int, seq_len: int,
 def backbone_decode(params, h: jax.Array, states: Dict, pos: jax.Array,
                     cfg: ModelConfig, *, pre0: Optional[Dict] = None,
                     rules=None, n_valid: Optional[jax.Array] = None,
-                    rope_applied: bool = False) -> Tuple[jax.Array, Dict]:
+                    rope_applied: bool = False, paged=None,
+                    lane_valid: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, Dict, jax.Array]:
     """``n_valid is None``: classic one-token step (h is (B,1,d)).
     With ``n_valid`` (B,): chunked step — h is (B,T,d); attention layers
     (incl. MLA) write their chunk of K/V (or latents) in one call, recurrent
     layers scan the chunk with masked state commits. Every kind supports it.
+    ``paged`` (a PageTables) switches attention caches to page-pool
+    addressing; ``lane_valid`` masks dead slots out of MoE routing in the
+    one-token step. Returns (h, states, moe_dropped_token_slots).
     """
     plan = layer_plan(cfg)
+    kw = dict(n_valid=n_valid, paged=paged, lane_valid=lane_valid)
+    drops = jnp.zeros((), jnp.int32)
     new_states: Dict[str, Any] = {}
-    h, st = block_decode(params['layer0'], h, states['layer0'], pos, cfg,
-                         plan.kinds[0], plan.use_moe[0], pre=pre0,
-                         n_valid=n_valid, rope_applied=rope_applied)
+    h, st, d0 = block_decode(params['layer0'], h, states['layer0'], pos, cfg,
+                             plan.kinds[0], plan.use_moe[0], pre=pre0,
+                             rope_applied=rope_applied, **kw)
     new_states['layer0'] = st
+    drops += d0
     if plan.n_head:
         new_states['head'] = []
         for i in range(plan.n_head):
-            h, st = block_decode(params['head'][i], h, states['head'][i], pos,
-                                 cfg, plan.kinds[1 + i], plan.use_moe[1 + i],
-                                 n_valid=n_valid)
+            h, st, d = block_decode(params['head'][i], h, states['head'][i],
+                                    pos, cfg, plan.kinds[1 + i],
+                                    plan.use_moe[1 + i], **kw)
             new_states['head'].append(st)
+            drops += d
     if plan.reps:
         body_moe = plan.use_moe[1 + plan.n_head]
         slot_shardings = _slot_shardings(cfg, plan, body_moe, rules)
 
-        def body(hh, xs):
+        def body(carry, xs):
+            hh, dr = carry
             prm, sts = xs
             outs = []
             for s, kind in enumerate(plan.slots):
                 prm_s = _constrain_params(prm[s], slot_shardings[s])
-                hh, st_s = block_decode(prm_s, hh, sts[s], pos, cfg, kind,
-                                        body_moe, n_valid=n_valid)
+                hh, st_s, d_s = block_decode(prm_s, hh, sts[s], pos, cfg,
+                                             kind, body_moe, **kw)
                 outs.append(st_s)
-            return hh, tuple(outs)
+                dr += d_s
+            return (hh, dr), tuple(outs)
 
-        h, body_states = jax.lax.scan(
-            body, h, (tuple(params['body']), tuple(states['body'])))
+        (h, drops), body_states = jax.lax.scan(
+            body, (h, drops), (tuple(params['body']), tuple(states['body'])))
         new_states['body'] = list(body_states)
     if plan.n_tail:
         new_states['tail'] = []
         for i in range(plan.n_tail):
-            h, st = block_decode(params['tail'][i], h, states['tail'][i], pos,
-                                 cfg, plan.slots[i], plan.use_moe[-1],
-                                 n_valid=n_valid)
+            h, st, d = block_decode(params['tail'][i], h, states['tail'][i],
+                                    pos, cfg, plan.slots[i],
+                                    plan.use_moe[-1], **kw)
             new_states['tail'].append(st)
-    return h, new_states
+            drops += d
+    return h, new_states, drops
 
 
 def prime_meta_states(params, states: Dict, cfg: ModelConfig,
@@ -375,8 +402,8 @@ def prime_meta_states(params, states: Dict, cfg: ModelConfig,
         h = jnp.broadcast_to(
             params['meta'][i].astype(jnp.dtype(cfg.dtype))[None, None],
             (batch, 1, cfg.d_model))
-        _, states = backbone_decode(params['backbone'], h, states,
-                                    jnp.full((batch,), i, jnp.int32), cfg)
+        _, states, _ = backbone_decode(params['backbone'], h, states,
+                                       jnp.full((batch,), i, jnp.int32), cfg)
     return states
 
 
@@ -384,8 +411,9 @@ def lm_decode_step(params, tokens: jax.Array, states: Dict, pos: jax.Array,
                    cfg: ModelConfig, *, precomputed=None, rules=None,
                    n_valid: Optional[jax.Array] = None,
                    return_hidden: bool = False,
-                   fused_gather_rope: bool = False
-                   ) -> Tuple[jax.Array, Dict]:
+                   fused_gather_rope: bool = False, paged=None,
+                   lane_valid: Optional[jax.Array] = None,
+                   return_stats: bool = False) -> Tuple[jax.Array, Dict]:
     """tokens (B,T), pos (B,) -> (logits (B,T,V), new states).
 
     ``n_valid is None`` is the classic one-token step (T == 1). With
@@ -404,6 +432,11 @@ def lm_decode_step(params, tokens: jax.Array, states: Dict, pos: jax.Array,
     ``return_hidden`` skips final-norm + lm_head and returns the raw hidden
     states — the serving engine selects each slot's last valid lane first and
     runs the head on (B,1,d) instead of (B,T,V).
+
+    ``paged`` (an ``attention.PageTables``) switches the attention caches to
+    page-pool addressing — shared-prefix serving. ``lane_valid`` (B,) masks
+    dead slots out of MoE routing in the one-token step. ``return_stats``
+    appends a stats dict (``moe_drops``) to the return tuple.
     """
     rope_applied = False
     if n_valid is None:
@@ -429,12 +462,15 @@ def lm_decode_step(params, tokens: jax.Array, states: Dict, pos: jax.Array,
             pre0 = None
             h = embed_tokens(params, tokens, cfg,
                              positions=pos_t if cfg.pos == 'learned' else None)
-    h, states = backbone_decode(params['backbone'], h, states, pos, cfg,
-                                pre0=pre0, rules=rules, n_valid=n_valid,
-                                rope_applied=rope_applied)
-    if return_hidden:
-        return h, states
-    return lm_logits(params, h, cfg), states
+    h, states, drops = backbone_decode(params['backbone'], h, states, pos,
+                                       cfg, pre0=pre0, rules=rules,
+                                       n_valid=n_valid,
+                                       rope_applied=rope_applied,
+                                       paged=paged, lane_valid=lane_valid)
+    out = h if return_hidden else lm_logits(params, h, cfg)
+    if return_stats:
+        return out, states, {'moe_drops': drops}
+    return out, states
 
 
 def _fused_gather_rope_pre0(precomputed, tokens: jax.Array, pos_t: jax.Array,

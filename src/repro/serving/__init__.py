@@ -1,4 +1,5 @@
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.kvpool import PrefixCache
 from repro.serving.sampler import sample_tokens
 
-__all__ = ['Request', 'ServingEngine', 'sample_tokens']
+__all__ = ['Request', 'ServingEngine', 'PrefixCache', 'sample_tokens']

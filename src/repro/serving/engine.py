@@ -1,4 +1,5 @@
-"""Batched serving engine: continuous batching with chunked prefill.
+"""Batched serving engine: continuous batching with chunked prefill and an
+optional paged KV pool with shared-prefix caching.
 
 The engine schedules **mixed steps** over a fixed set of slots. Decoding
 slots consume one (sampled) token per step; prefilling slots consume up to
@@ -19,12 +20,29 @@ blocking. Slot reuse runs a pre-jitted per-slot indexed reset (one
 ``dynamic_update_slice`` per state leaf) instead of rebuilding the state
 tree host-side.
 
+**Paged KV + prefix caching** (``prefix_cache=True``): per-slot contiguous
+caches are replaced by a global pool of ``page_size``-token pages (one
+``(num_pages, page_size, ...)`` array per attention layer) addressed
+through per-slot page tables, and admission looks the prompt up in a
+token-prefix radix index (``repro.serving.kvpool``). A request whose
+prompt shares a cached prefix attaches the prefix's pages read-only and
+skips that part of its chunked prefill entirely — the shared-system-prompt
+TTFT win. Decode attends over a gathered dense-shaped *view* of the
+slot's pages, so token outputs stay bit-identical to the dense engine.
+Sliding-window layers get private ring pages; architectures with ring or
+recurrent state additionally store a per-boundary state *snapshot* on the
+radix node and restore it on a hit. A request that stops short inside a
+cached page copies the shared rows into a private page (copy-on-write).
+MoE routing masks padding and free-slot lanes (they can never displace a
+real token from expert capacity) and ``stats()`` reports the drop counter.
+
 Logits-on-demand (prompt scoring): a request submitted with
 ``return_logits=True`` gets ``prompt_logits`` filled with the all-position
 logits of its prompt — row ``i`` is the next-token distribution after
 consuming ``prompt[i]`` — reusing the same chunk path with the lm_head run
 on every valid lane instead of the last one. :meth:`ServingEngine.score`
-wraps this for a batch of prompts.
+wraps this for a batch of prompts. Scoring requests always prefill cold
+(their logits must cover every prompt position).
 
 THE PAPER lives here: constructing the engine with ``precomputed=`` makes
 every step's embedding-read + layer-0 projections a single row gather per
@@ -44,8 +62,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import attention as A
 from repro.models.model import Model
 from repro.models.transformer import lm_logits
+from repro.serving.kvpool import PrefixCache
 from repro.serving.sampler import sample_tokens
 
 
@@ -64,23 +84,38 @@ class Request:
     first_token_t: float = 0.0
     finish_t: float = 0.0
     prompt_logits: Optional[np.ndarray] = None    # (P, V) if return_logits
+    prefix_hit_tokens: int = 0            # prompt tokens served from cache
     _logit_chunks: List[np.ndarray] = dataclasses.field(default_factory=list,
                                                         repr=False)
+
+
+def _is_body(path) -> bool:
+    return "'body'" in jax.tree_util.keystr(path)
+
+
+def _is_pos_leaf(path) -> bool:
+    return jax.tree_util.keystr(path).endswith("['pos']")
 
 
 class ServingEngine:
     def __init__(self, model: Model, params, *, max_slots: int = 8,
                  max_seq: int = 512, precomputed=None, seed: int = 0,
                  dtype=jnp.float32, kv_quant: bool = False,
-                 chunk_size: int = 1, fused_gather_rope: bool = False):
+                 chunk_size: int = 1, fused_gather_rope: bool = False,
+                 prefix_cache: bool = False, page_size: int = 16,
+                 num_pages: Optional[int] = None):
         self.model, self.params = model, params
         self.max_slots, self.max_seq = max_slots, max_seq
         self.precomputed = precomputed
         if model.cfg.arch_class == 'audio':
             chunk_size = 1   # enc-dec decode is one token per step by API
-        from repro.models.blocks import ATTN_KINDS
+            if prefix_cache:
+                raise ValueError('paged prefix caching is not supported for '
+                                 'audio enc-dec decode')
+        from repro.models.blocks import ATTN_KINDS, kind_window
         from repro.models.transformer import layer_plan
-        kind0 = layer_plan(model.cfg).kinds[0]
+        plan = layer_plan(model.cfg)
+        kind0 = plan.kinds[0]
         if fused_gather_rope and (precomputed is None or chunk_size == 1
                                   or model.cfg.pos != 'rope'
                                   or model.cfg.mla is not None
@@ -99,84 +134,252 @@ class ServingEngine:
             self.precomputed = precomputed
         self.chunk_size = chunk_size
         self.fused_gather_rope = fused_gather_rope
-        self.states = model.make_states(max_slots, max_seq, dtype,
-                                        kv_quant=kv_quant, chunk=chunk_size)
         self._meta = getattr(model.cfg, 'num_meta_tokens', 0)
+        self.paged = bool(prefix_cache)
+        self.page_size = page_size
+
+        # --------------------------------------------------- paged geometry
+        if self.paged:
+            if self._meta:
+                raise ValueError('paged prefix caching does not support '
+                                 'meta-token architectures yet (the primed '
+                                 'meta prefix would need template pages)')
+            if max_seq % page_size:
+                raise ValueError(f'max_seq ({max_seq}) must be a multiple of '
+                                 f'page_size ({page_size}) so the paged '
+                                 'virtual cache matches the dense cache '
+                                 'length exactly (bit-identity)')
+            windowed = any(kind_window(model.cfg, k) for k in plan.kinds)
+            self._sc_ring = A.cache_len(model.cfg.window, max_seq,
+                                        chunk_size) if windowed else 0
+            self._pages_lin = max_seq // page_size
+            self._pages_ring = -(-self._sc_ring // page_size)
+            # snapshot archs: any layer whose decode state is rewritten in
+            # place (ring caches, recurrent/conv state) — prefix resume
+            # needs the radix node's state snapshot, not just shared pages
+            self._needs_snapshot = any(k != 'global' for k in plan.kinds)
+            if num_pages is None:
+                num_pages = 1 + max_slots * (self._pages_lin
+                                             + self._pages_ring) \
+                    + 8 * self._pages_lin
+            # a single admission needs ring pages + a COW page, and the
+            # first dispatch one linear page; below this floor admission
+            # can never succeed and run() would stall silently
+            floor = 1 + self._pages_ring + 2
+            if num_pages < floor:
+                raise ValueError(f'num_pages ({num_pages}) cannot host even '
+                                 f'one request: need >= {floor} '
+                                 f'(null page + {self._pages_ring} ring '
+                                 'pages + COW/linear headroom)')
+            self.kv = PrefixCache(num_pages, page_size)
+            self.num_pages = num_pages
+        else:
+            self._sc_ring = 0
+            self.kv = None
+            self.num_pages = 0
+
+        self.states = model.make_states(
+            max_slots, max_seq, dtype, kv_quant=kv_quant, chunk=chunk_size,
+            num_pages=self.num_pages if self.paged else 0,
+            page_size=page_size if self.paged else 0)
         if self._meta:
             # prime hymba-style learnable meta tokens into every slot's state
             from repro.models.transformer import prime_meta_states
             self.states = prime_meta_states(params, self.states, model.cfg,
                                             max_slots)
+        self._paged_mask = model.paged_state_mask(kv_quant) if self.paged \
+            else None
         # template for clean slot reuse (covers caches AND recurrent states).
         # A real copy: the step/reset jits donate their states argument, so
-        # the template must not alias the live buffers.
-        self._fresh = jax.tree_util.tree_map(jnp.array, self.states)
+        # the template must not alias the live buffers. Page-pool leaves are
+        # never slot-reset (pages are cleared on allocation instead) — their
+        # template entry is a dummy.
+        if self.paged:
+            self._fresh = jax.tree_util.tree_map(
+                lambda x, m: jnp.zeros(()) if m else jnp.array(x),
+                self.states, self._paged_mask)
+        else:
+            self._fresh = jax.tree_util.tree_map(jnp.array, self.states)
         self.slot_req: List[Optional[Request]] = [None] * max_slots
         self.slot_pos = np.zeros(max_slots, np.int64)       # next position
         self.slot_next_tok = np.zeros(max_slots, np.int32)  # token to feed
         self.queue: List[Request] = []
         self.key = jax.random.PRNGKey(seed)
         self.steps = 0
+        self.moe_token_drops = 0
 
-        def step(params, states, tokens, pos, key, temps):
-            logits, states = model.decode_step(
-                params, tokens, states, pos, precomputed=precomputed)
+        # ------------------------------------------------ per-slot paging
+        if self.paged:
+            self._pt = np.zeros((max_slots, self._pages_lin), np.int32)
+            self._rt = np.zeros((max_slots, max(self._pages_ring, 1)),
+                                np.int32)
+            self.slot_node = [None] * max_slots       # attached radix node
+            self.slot_nblocks = np.zeros(max_slots, np.int32)
+            self.slot_priv: List[List[int]] = [[] for _ in range(max_slots)]
+            self.slot_ring: List[List[int]] = [[] for _ in range(max_slots)]
+            self.slot_insert_at = np.full(max_slots, -1, np.int64)
+
+        self._build_programs()
+        if self.paged:
+            self._build_page_ops()
+
+    # ----------------------------------------------------------- programs
+    def _build_programs(self) -> None:
+        model, precomputed = self.model, self.precomputed
+        sc_ring = self._sc_ring
+
+        def paged_tables(pt, rt):
+            if pt is None:
+                return None
+            return A.PageTables(pt, rt, sc_ring)
+
+        def step(params, states, tokens, pos, key, temps, lane_valid):
+            logits, states, stats = model.decode_step(
+                params, tokens, states, pos, precomputed=precomputed,
+                lane_valid=lane_valid, return_stats=True)
             nxt = sample_tokens(logits[:, 0], key, temps)
-            return states, nxt
+            return states, nxt, stats['moe_drops']
 
         self._step = jax.jit(step, donate_argnums=1)
 
-        def step_logits(params, states, tokens, pos, key, temps):
-            logits, states = model.decode_step(
-                params, tokens, states, pos, precomputed=precomputed)
+        def step_logits(params, states, tokens, pos, key, temps, lane_valid):
+            logits, states, stats = model.decode_step(
+                params, tokens, states, pos, precomputed=precomputed,
+                lane_valid=lane_valid, return_stats=True)
             nxt = sample_tokens(logits[:, 0], key, temps)
-            return states, nxt, logits                            # (B,1,V)
+            return states, nxt, stats['moe_drops'], logits          # (B,1,V)
 
         self._step_logits = jax.jit(step_logits, donate_argnums=1)
 
-        def chunk_hidden(params, states, tokens, pos, n_valid, key, temps):
-            h, states = model.decode_step(
+        def chunk_hidden(params, states, tokens, pos, n_valid, key, temps,
+                         pt, rt):
+            h, states, stats = model.decode_step(
                 params, tokens, states, pos, precomputed=precomputed,
                 n_valid=n_valid, return_hidden=True,
-                fused_gather_rope=self.fused_gather_rope)
+                fused_gather_rope=self.fused_gather_rope,
+                paged=paged_tables(pt, rt), return_stats=True)
             # head only on each slot's last valid lane, not all T lanes
             idx = jnp.maximum(n_valid - 1, 0)[:, None, None]
             h_last = jnp.take_along_axis(h, idx, axis=1)          # (B,1,d)
             logits = lm_logits(params, h_last, model.cfg)
             nxt = sample_tokens(logits[:, 0], key, temps)
-            return h, states, nxt
+            return h, states, nxt, stats['moe_drops']
 
-        def chunk_step(params, states, tokens, pos, n_valid, key, temps):
-            _, states, nxt = chunk_hidden(params, states, tokens, pos,
-                                          n_valid, key, temps)
-            return states, nxt
+        def chunk_step(params, states, tokens, pos, n_valid, key, temps,
+                       pt=None, rt=None):
+            _, states, nxt, drops = chunk_hidden(params, states, tokens, pos,
+                                                 n_valid, key, temps, pt, rt)
+            return states, nxt, drops
 
         def chunk_step_logits(params, states, tokens, pos, n_valid, key,
-                              temps):
+                              temps, pt=None, rt=None):
             # logits-on-demand: same sampled-token program as chunk_step
             # (last-valid-lane head), plus the lm_head on EVERY lane for
             # prompt scoring — padding lanes (t >= n_valid) are garbage and
             # dropped host-side.
-            h, states, nxt = chunk_hidden(params, states, tokens, pos,
-                                          n_valid, key, temps)
-            return states, nxt, lm_logits(params, h, model.cfg)   # (B,T,V)
+            h, states, nxt, drops = chunk_hidden(params, states, tokens, pos,
+                                                 n_valid, key, temps, pt, rt)
+            return states, nxt, drops, lm_logits(params, h, model.cfg)
 
+        # paged mode always runs the chunk-shaped program (its T == 1 case
+        # is bit-identical to the single-token step), so a paged engine
+        # needs the chunk jits even at chunk_size == 1
+        want_chunk = self.chunk_size > 1 or self.paged
         self._chunk_step = jax.jit(chunk_step, donate_argnums=1) \
-            if chunk_size > 1 else None
+            if want_chunk else None
         self._chunk_step_logits = jax.jit(chunk_step_logits, donate_argnums=1) \
-            if chunk_size > 1 else None
+            if want_chunk else None
+
+        mask = self._paged_mask
 
         def reset(states, fresh, slot):
             # stacked ('body') states carry the scan axis first -> batch is 1
-            def one(path, leaf, fr):
-                axis = 1 if "'body'" in jax.tree_util.keystr(path) else 0
+            def one(path, leaf, fr, *m):
+                if m and m[0]:
+                    return leaf                    # page-pool leaf: shared
+                axis = 1 if _is_body(path) else 0
                 row = jax.lax.dynamic_index_in_dim(fr, slot, axis=axis,
                                                    keepdims=True)
                 return jax.lax.dynamic_update_slice_in_dim(leaf, row, slot,
                                                            axis=axis)
-            return jax.tree_util.tree_map_with_path(one, states, fresh)
+            if mask is None:
+                return jax.tree_util.tree_map_with_path(one, states, fresh)
+            return jax.tree_util.tree_map_with_path(one, states, fresh, mask)
 
         self._reset = jax.jit(reset, donate_argnums=0)
+
+    def _build_page_ops(self) -> None:
+        """Jitted page maintenance: clear-on-alloc, copy-on-write, and the
+        per-boundary snapshot capture/restore for ring/recurrent state."""
+        mask = self._paged_mask
+
+        def clear(states, pages):
+            # pages (K,) physical ids; OOB entries (== num_pages) dropped.
+            # Restores freshly-allocated pages to the null state (zeros,
+            # pos == -1) so stale contents from a previous owner can never
+            # alias into a new slot's validity mask.
+            def one(path, leaf, m):
+                if not m:
+                    return leaf
+                val = -1 if _is_pos_leaf(path) else 0
+                if _is_body(path):
+                    return leaf.at[:, pages].set(val, mode='drop')
+                return leaf.at[pages].set(val, mode='drop')
+            return jax.tree_util.tree_map_with_path(one, states, mask)
+
+        self._clear_pages = jax.jit(clear, donate_argnums=0)
+
+        def cow(states, src, dst, rem):
+            # copy rows [0, rem) of page src into page dst; remaining rows
+            # of dst get the null state — bitwise what a cold prefill of
+            # those rem tokens would have left in a fresh page
+            def one(path, leaf, m):
+                if not m:
+                    return leaf
+                body = _is_body(path)
+                axis = 1 if body else 0
+                row = jax.lax.dynamic_index_in_dim(leaf, src, axis=axis,
+                                                   keepdims=False)
+                ps = row.shape[1 if body else 0]
+                keep = jnp.arange(ps, dtype=jnp.int32) < rem
+                keep = keep.reshape((1, ps) + (1,) * (row.ndim - 2)) if body \
+                    else keep.reshape((ps,) + (1,) * (row.ndim - 1))
+                fresh = -1 if _is_pos_leaf(path) else 0
+                row = jnp.where(keep, row, jnp.asarray(fresh, row.dtype))
+                if body:
+                    return leaf.at[:, dst].set(row)
+                return leaf.at[dst].set(row)
+            return jax.tree_util.tree_map_with_path(one, states, mask)
+
+        self._cow_copy = jax.jit(cow, donate_argnums=0)
+
+        def capture(states, slot, ring_pages):
+            # snapshot of everything a shared-page attach cannot restore:
+            # per-slot state rows (recurrent / conv) + ring page contents
+            def one(path, leaf, m):
+                if m:
+                    if _is_body(path):
+                        return jnp.take(leaf, ring_pages, axis=1)
+                    return jnp.take(leaf, ring_pages, axis=0)
+                axis = 1 if _is_body(path) else 0
+                return jax.lax.dynamic_index_in_dim(leaf, slot, axis=axis,
+                                                    keepdims=False)
+            return jax.tree_util.tree_map_with_path(one, states, mask)
+
+        self._capture = jax.jit(capture)     # read-only: no donation
+
+        def restore(states, snap, slot, ring_pages):
+            def one(path, leaf, sn, m):
+                if m:
+                    if _is_body(path):
+                        return leaf.at[:, ring_pages].set(sn, mode='drop')
+                    return leaf.at[ring_pages].set(sn, mode='drop')
+                axis = 1 if _is_body(path) else 0
+                return jax.lax.dynamic_update_slice_in_dim(
+                    leaf, jnp.expand_dims(sn, axis), slot, axis=axis)
+            return jax.tree_util.tree_map_with_path(one, states, snap, mask)
+
+        self._restore = jax.jit(restore, donate_argnums=0)
 
     # ------------------------------------------------------------- plumbing
     def submit(self, req: Request) -> None:
@@ -188,14 +391,172 @@ class ServingEngine:
         primed meta prefix) from the fresh template — no cross-request
         leakage on slot reuse. One jit'd indexed copy per leaf; O(slot) work
         instead of flattening/rebuilding the whole state tree host-side.
+        In paged mode only per-slot leaves reset; pages are cleared on
+        allocation instead.
         """
         self.states = self._reset(self.states, self._fresh,
                                   jnp.int32(slot))
+
+    # ------------------------------------------------------------ paged ops
+    def _alloc_pages(self, n: int) -> Optional[List[int]]:
+        if n == 0:
+            return []
+        pages = self.kv.alloc(n)
+        if pages is None:
+            return None
+        ids = jnp.asarray(np.asarray(pages, np.int32))
+        self.states = self._clear_pages(self.states, ids)
+        return pages
+
+    def _release_slot_pages(self, slot: int) -> None:
+        if self.slot_node[slot] is not None:
+            self.kv.release(self.slot_node[slot])
+            self.slot_node[slot] = None
+        if self.slot_priv[slot]:
+            self.kv.free(self.slot_priv[slot])
+            self.slot_priv[slot] = []
+        if self.slot_ring[slot]:
+            self.kv.free(self.slot_ring[slot])
+            self.slot_ring[slot] = []
+        self._pt[slot] = 0
+        self._rt[slot] = 0
+        self.slot_nblocks[slot] = 0
+        self.slot_insert_at[slot] = -1
+
+    def _admit_paged(self, slot: int, req: Request) -> bool:
+        """Prefix lookup + page attach for one admission. Returns False if
+        the pool cannot currently host the request (it goes back to the
+        queue)."""
+        ps = self.page_size
+        prompt = np.asarray(req.prompt)
+        P = len(prompt)
+        node, nblocks, pages = None, 0, []
+        if not req.return_logits and P > 1:
+            res = self.kv.match(prompt, max_tokens=P - 1,
+                                need_snapshot=self._needs_snapshot)
+            node, nblocks, pages = res.node, res.n_blocks, res.pages
+        # pin the match before any allocation can trigger eviction
+        self.kv.attach(node)
+        ring = self._alloc_pages(self._pages_ring)
+        if ring is None:
+            self.kv.release(node)
+            return False
+        eff = nblocks * ps
+        cow_page = None
+        if not self._needs_snapshot and not req.return_logits:
+            # copy-on-write: reuse the head of a cached block this prompt
+            # stops short inside (or diverges from past its shared rows)
+            tail_len = min(P - 1 - eff, ps - 1)
+            if tail_len > 0:
+                alloc = self._alloc_pages(1)
+                if alloc is None:
+                    self.kv.release(node)
+                    self.kv.free(ring)
+                    return False
+                src = self.kv.find_extension(node, prompt[eff:eff + tail_len])
+                if src >= 0:
+                    self.states = self._cow_copy(
+                        self.states, jnp.int32(src), jnp.int32(alloc[0]),
+                        jnp.int32(tail_len))
+                    cow_page = alloc[0]
+                    eff += tail_len
+                else:
+                    self.kv.free(alloc)
+        self._reset_slot(slot)
+        self.slot_ring[slot] = ring
+        self._rt[slot, :len(ring)] = ring
+        row = list(pages) + ([cow_page] if cow_page is not None else [])
+        self._pt[slot, :len(row)] = row
+        self.slot_nblocks[slot] = len(row)
+        self.slot_node[slot] = node
+        self.slot_priv[slot] = [cow_page] if cow_page is not None else []
+        if eff:
+            self.kv.hits += 1
+            self.kv.hit_tokens += eff
+            req.prefix_hit_tokens = eff
+        elif not req.return_logits:
+            self.kv.misses += 1
+        if self._needs_snapshot and node is not None:
+            ring_ids = jnp.asarray(np.asarray(
+                ring if ring else [self.num_pages], np.int32))
+            self.states = self._restore(self.states, node.snapshot,
+                                        jnp.int32(slot), ring_ids)
+        # where to publish this prompt's prefix
+        if req.return_logits:
+            self.slot_insert_at[slot] = -1
+        elif self._needs_snapshot:
+            target = ((P - 1) // ps) * ps
+            self.slot_insert_at[slot] = target if target > eff else -1
+        else:
+            self.slot_insert_at[slot] = P if P // ps > nblocks else -1
+        self.slot_pos[slot] = eff
+        self.slot_next_tok[slot] = int(prompt[eff])
+        return True
+
+    def _ensure_blocks(self, slot: int, end_pos: int) -> None:
+        """On-demand linear-page allocation up to position ``end_pos``."""
+        need = -(-end_pos // self.page_size)
+        while self.slot_nblocks[slot] < need:
+            alloc = self._alloc_pages(1)
+            if alloc is None:
+                raise RuntimeError(
+                    'KV page pool exhausted (and nothing evictable): raise '
+                    'num_pages or lower max_slots/max_seq')
+            nb = int(self.slot_nblocks[slot])
+            self._pt[slot, nb] = alloc[0]
+            self.slot_priv[slot].append(alloc[0])
+            self.slot_nblocks[slot] = nb + 1
+
+    def _maybe_insert(self, slot: int, p_before: int, p_after: int) -> None:
+        """Publish a prefilled prompt's full pages into the radix index."""
+        target = int(self.slot_insert_at[slot])
+        if target < 0:
+            return
+        req = self.slot_req[slot]
+        ps = self.page_size
+        prompt = np.asarray(req.prompt)
+        P = len(prompt)
+        if self._needs_snapshot:
+            if p_after != target:
+                return
+            n_blocks = target // ps
+            ring_ids = jnp.asarray(np.asarray(
+                self.slot_ring[slot] if self.slot_ring[slot]
+                else [self.num_pages], np.int32))
+            snap = self._capture(self.states, jnp.int32(slot), ring_ids)
+        else:
+            if not (p_before < P <= p_after):
+                return
+            n_blocks = P // ps
+            snap = None
+        node, transferred = self.kv.insert(prompt, n_blocks,
+                                           list(self._pt[slot, :n_blocks]),
+                                           snapshot=snap)
+        moved = set(transferred)
+        self.slot_priv[slot] = [p for p in self.slot_priv[slot]
+                                if p not in moved]
+        self.kv.attach(node)
+        self.kv.release(self.slot_node[slot])
+        self.slot_node[slot] = node
+        self.slot_insert_at[slot] = -1
 
     def _admit(self) -> None:
         for slot in range(self.max_slots):
             if self.slot_req[slot] is None and self.queue:
                 req = self.queue.pop(0)
+                if self.paged:
+                    if not self._admit_paged(slot, req):
+                        self.queue.insert(0, req)     # pool full: retry later
+                        if not any(r is not None for r in self.slot_req):
+                            # no in-flight request will ever free pages and
+                            # eviction already ran dry: stalling is permanent
+                            raise RuntimeError(
+                                'KV page pool cannot host the queued '
+                                'request (nothing evictable): raise '
+                                'num_pages or lower max_seq')
+                        return
+                    self.slot_req[slot] = req
+                    continue
                 self.slot_req[slot] = req
                 self.slot_pos[slot] = self._meta   # tokens start after meta
                 self.slot_next_tok[slot] = int(req.prompt[0])
@@ -229,8 +590,11 @@ class ServingEngine:
         self.key, sub = jax.random.split(self.key)
 
         logits = None
-        if prefilling:
-            T = self.chunk_size
+        if prefilling or self.paged:
+            # paged mode always runs the chunk-shaped program: its T == 1
+            # case is bit-identical to the single-token step, and the page
+            # scatter/gather needs the n_valid lane masking anyway
+            T = self.chunk_size if prefilling else 1
             tokens = np.zeros((self.max_slots, T), np.int32)
             n_valid = np.zeros(self.max_slots, np.int32)
             for s in active:
@@ -238,28 +602,44 @@ class ServingEngine:
                 p = self._progress(s)
                 if p < len(req.prompt):              # prefilling slot
                     take = min(T, len(req.prompt) - p)
+                    if self.paged and self._needs_snapshot \
+                            and p < self.slot_insert_at[s]:
+                        # land exactly on the snapshot boundary so the
+                        # captured state is the state after `target` tokens
+                        take = min(take, int(self.slot_insert_at[s]) - p)
                     tokens[s, :take] = req.prompt[p:p + take]
                     n_valid[s] = take
                 else:                                # decoding slot: 1 token
                     tokens[s, 0] = self.slot_next_tok[s]
                     n_valid[s] = 1
-            args = (self.params, self.states, jnp.asarray(tokens), pos,
-                    jnp.asarray(n_valid), sub, temps)
+                if self.paged:
+                    self._ensure_blocks(s, int(self.slot_pos[s])
+                                        + int(n_valid[s]))
+            args = [self.params, self.states, jnp.asarray(tokens), pos,
+                    jnp.asarray(n_valid), sub, temps]
+            if self.paged:
+                args += [jnp.asarray(self._pt), jnp.asarray(self._rt)]
             if want_logits:
-                self.states, nxt, logits = self._chunk_step_logits(*args)
+                self.states, nxt, drops, logits = \
+                    self._chunk_step_logits(*args)
             else:
-                self.states, nxt = self._chunk_step(*args)
+                self.states, nxt, drops = self._chunk_step(*args)
             consumed = n_valid
         else:
             tokens = jnp.asarray(self.slot_next_tok[:, None])
-            args = (self.params, self.states, tokens, pos, sub, temps)
+            lane_valid = jnp.asarray(np.asarray(
+                [self.slot_req[s] is not None
+                 for s in range(self.max_slots)], bool))
+            args = (self.params, self.states, tokens, pos, sub, temps,
+                    lane_valid)
             if want_logits:
-                self.states, nxt, logits = self._step_logits(*args)
+                self.states, nxt, drops, logits = self._step_logits(*args)
             else:
-                self.states, nxt = self._step(*args)
+                self.states, nxt, drops = self._step(*args)
             consumed = np.ones(self.max_slots, np.int32)
 
         nxt = np.asarray(nxt)
+        self.moe_token_drops += int(drops)
         if logits is not None:
             logits = np.asarray(logits)
         self.steps += 1
@@ -268,6 +648,8 @@ class ServingEngine:
             p_before = self._progress(s)
             self.slot_pos[s] += int(consumed[s])
             p = self._progress(s)                    # progress within request
+            if self.paged:
+                self._maybe_insert(s, p_before, p)
             if req.return_logits and p_before < len(req.prompt):
                 # lanes 0..consumed-1 hold logits for prompt[p_before..p-1];
                 # copy so the slice doesn't pin the whole step's (B,T,V)
@@ -289,6 +671,8 @@ class ServingEngine:
                     or int(self.slot_pos[s]) + 1 >= self.max_seq:
                 req.done, req.finish_t = True, time.time()
                 self.slot_req[s] = None
+                if self.paged:
+                    self._release_slot_pages(s)
 
     def run(self, max_iters: int = 100_000) -> None:
         it = 0
@@ -304,6 +688,8 @@ class ServingEngine:
         consuming ``prompts[i][t]``, so
         ``log_softmax(out[i][t - 1])[prompts[i][t]]`` scores token ``t``.
         Shares slots/steps with any concurrently queued generation work.
+        Scoring prompts always prefill cold (every position's logits are
+        required), even in a prefix-cached engine.
         """
         reqs = [Request(uid=-1 - i, prompt=np.asarray(p, np.int32),
                         max_new_tokens=1, return_logits=True)
@@ -320,9 +706,17 @@ class ServingEngine:
         lat = [r.finish_t - r.submit_t for r in done]
         ttft = [r.first_token_t - r.submit_t for r in done
                 if r.first_token_t]
-        return {
+        hit_ttft = [r.first_token_t - r.submit_t for r in done
+                    if r.first_token_t and r.prefix_hit_tokens]
+        out = {
             'completed': len(done), 'tokens': toks,
             'mean_latency_s': float(np.mean(lat)) if lat else 0.0,
             'mean_ttft_s': float(np.mean(ttft)) if ttft else 0.0,
             'engine_steps': self.steps,
+            'moe_token_drops': self.moe_token_drops,
         }
+        if self.kv is not None:
+            out.update(self.kv.stats())
+            out['mean_ttft_on_hit_s'] = float(np.mean(hit_ttft)) \
+                if hit_ttft else 0.0
+        return out

@@ -1,0 +1,217 @@
+"""Page allocator / radix prefix index properties (host-side policy).
+
+The three contracts the serving engine leans on:
+
+- pages referenced by an attached (refcounted) prefix are NEVER evicted,
+  no matter the allocation pressure;
+- alloc/free round-trips leak nothing — after releasing everything and
+  draining the cache, every non-null page is free again;
+- ``match`` returns the longest cached prefix in whole-page blocks,
+  honouring the ``max_tokens`` cap and the snapshot requirement.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.serving.kvpool import NULL_PAGE, PrefixCache
+
+
+def _insert_chain(kv: PrefixCache, tokens: np.ndarray, n_blocks: int):
+    pages = kv.alloc(n_blocks)
+    assert pages is not None
+    node, transferred = kv.insert(tokens, n_blocks, pages, snapshot=None)
+    # blocks that already existed keep the old page; ours must be freed
+    dup = [p for p in pages if p not in set(transferred)]
+    kv.free(dup)
+    return node
+
+
+# ------------------------------------------------------------- basic wiring
+def test_alloc_free_roundtrip_exact():
+    kv = PrefixCache(num_pages=9, page_size=4)
+    assert kv.pages_free() == 8
+    a = kv.alloc(3)
+    b = kv.alloc(5)
+    assert kv.alloc(1) is None          # empty and nothing evictable
+    assert NULL_PAGE not in a + b
+    kv.free(a)
+    kv.free(b)
+    assert kv.pages_free() == 8 and kv.pages_in_use() == 0
+
+
+def test_match_longest_prefix_and_cap():
+    kv = PrefixCache(num_pages=32, page_size=4)
+    toks = np.arange(100, 120)                        # 5 full blocks
+    _insert_chain(kv, toks, 5)
+    # full match
+    r = kv.match(toks)
+    assert r.n_blocks == 5 and len(r.pages) == 5
+    # longest *prefix* for a diverging prompt
+    div = toks.copy()
+    div[9] += 1                                       # diverge inside block 2
+    assert kv.match(div).n_blocks == 2
+    # max_tokens cap: must re-run at least the last token
+    assert kv.match(toks, max_tokens=len(toks) - 1).n_blocks == 4
+    assert kv.match(toks, max_tokens=7).n_blocks == 1
+    assert kv.match(toks[:3]).node is None            # sub-block prompt
+
+
+def test_match_needs_snapshot_walks_up():
+    kv = PrefixCache(num_pages=32, page_size=4)
+    toks = np.arange(50, 66)                          # 4 blocks
+    pages = kv.alloc(4)
+    node, _ = kv.insert(toks, 4, pages, snapshot=None)
+    assert kv.match(toks, need_snapshot=True).node is None
+    node.snapshot = 'state@16'
+    r = kv.match(toks, need_snapshot=True)
+    assert r.node is node and r.n_blocks == 4
+    # deeper chain without snapshot resolves to the snapshotted ancestor
+    ext = np.concatenate([toks, np.arange(4)])
+    p2 = kv.alloc(1)
+    kv.insert(ext, 5, pages + p2)
+    assert kv.match(ext, need_snapshot=True).n_blocks == 4
+
+
+def test_find_extension_partial_block():
+    kv = PrefixCache(num_pages=32, page_size=8)
+    toks = np.arange(200, 216)                        # 2 blocks
+    _insert_chain(kv, toks, 2)
+    r = kv.match(toks, max_tokens=15)                 # cap -> 1 block
+    assert r.n_blocks == 1
+    # the capped-off block is reachable as a COW source for its prefix rows
+    page = kv.find_extension(r.node, toks[8:15])
+    assert page != -1
+    assert kv.find_extension(r.node, toks[8:15] + 1) == -1
+    assert kv.find_extension(r.node, toks[8:8]) == -1
+
+
+def test_attached_pages_survive_eviction_pressure():
+    kv = PrefixCache(num_pages=6, page_size=4)        # 5 usable pages
+    toks = np.arange(12)                              # 3 blocks
+    node = _insert_chain(kv, toks, 3)
+    kv.attach(node)
+    # demand more than the free pool: only unattached cache could be evicted
+    assert kv.alloc(3) is None
+    assert kv.match(toks).n_blocks == 3               # untouched
+    kv.release(node)
+    got = kv.alloc(3)                                 # now evictable
+    assert got is not None and kv.evictions >= 1
+
+
+def test_lru_eviction_order():
+    kv = PrefixCache(num_pages=4, page_size=2)        # 3 usable pages
+    a = np.asarray([1, 2])
+    b = np.asarray([3, 4])
+    _insert_chain(kv, a, 1)
+    _insert_chain(kv, b, 1)
+    kv.match(a)                                       # a is now most recent
+    kv.alloc(2)                                       # forces one eviction
+    assert kv.match(a).n_blocks == 1                  # survivor is the MRU
+    assert kv.match(b).node is None
+
+
+# ------------------------------------------------------- hypothesis properties
+@settings(max_examples=40, deadline=None)
+@given(ps=st.integers(1, 6), ops=st.lists(
+    st.tuples(st.integers(0, 3), st.integers(0, 5), st.integers(1, 24)),
+    min_size=1, max_size=40), data=st.data())
+def test_pool_invariants_random_ops(ps, ops, data):
+    """Random insert/attach/release/alloc interleavings preserve the pool
+    invariants: no page is both free and cached, attached chains are never
+    evicted, and freeing everything returns the pool to empty."""
+    kv = PrefixCache(num_pages=12, page_size=ps)
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 31),
+                                          label='seed'))
+    attached = []          # (node,) we hold refs on
+    loose = []             # pages we own outside the cache
+
+    def cached_pages():
+        out, stack = [], [kv.root]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if n is not kv.root:
+                out.append(n.page)
+        return out
+
+    for op, seed, length in ops:
+        toks = rng.integers(0, 3, size=length)
+        if op == 0:                                    # insert a chain
+            nb = len(toks) // ps
+            if nb == 0:
+                continue
+            pages = kv.alloc(nb)
+            if pages is None:
+                continue
+            _, transferred = kv.insert(toks, nb, pages)
+            dup = [p for p in pages if p not in set(transferred)]
+            kv.free(dup)
+        elif op == 1:                                  # attach a match
+            r = kv.match(toks)
+            if r.node is not None:
+                kv.attach(r.node)
+                attached.append(r.node)
+        elif op == 2 and attached:                     # release one
+            kv.release(attached.pop())
+        else:                                          # raw alloc pressure
+            pages = kv.alloc(min(length, 4))
+            if pages is not None:
+                loose.extend(pages)
+        # ---- invariants after every op ----
+        cp = cached_pages()
+        free = set(kv._free)
+        assert NULL_PAGE not in cp and NULL_PAGE not in free
+        assert not (set(cp) & free), 'page both cached and free'
+        assert not (set(loose) & free), 'page both owned and free'
+        assert not (set(loose) & set(cp)), 'page both owned and cached'
+        assert len(cp) == len(set(cp)), 'page cached twice'
+        # attached chains stay resident
+        for node in attached:
+            n = node
+            while n is not kv.root:
+                assert n.parent.children.get(n.key) is n, \
+                    'attached node evicted'
+                n = n.parent
+
+    # ---- drain: everything frees back to an empty pool ----
+    for node in attached:
+        kv.release(node)
+    kv.free(loose)
+    while kv._evict_one():
+        pass
+    assert kv.pages_in_use() == 0
+    assert sorted(kv._free) == list(range(1, kv.num_pages))
+
+
+@settings(max_examples=40, deadline=None)
+@given(ps=st.integers(1, 5), n=st.integers(1, 6), cut=st.integers(0, 40),
+       data=st.data())
+def test_match_is_longest_prefix_property(ps, n, cut, data):
+    """match() == brute-force longest common whole-block prefix over
+    everything inserted."""
+    kv = PrefixCache(num_pages=64, page_size=ps)
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 31),
+                                          label='seed'))
+    inserted = []
+    for _ in range(n):
+        toks = rng.integers(0, 2, size=int(rng.integers(ps, 6 * ps)))
+        nb = len(toks) // ps
+        pages = kv.alloc(nb)
+        _, transferred = kv.insert(toks, nb, pages)
+        kv.free([p for p in pages if p not in set(transferred)])
+        inserted.append(toks)
+    probe = rng.integers(0, 2, size=int(rng.integers(0, 6 * ps)))
+    want = 0
+    for toks in inserted:
+        common = 0
+        for b in range(min(len(toks), len(probe)) // ps):
+            if np.array_equal(toks[b * ps:(b + 1) * ps],
+                              probe[b * ps:(b + 1) * ps]):
+                common = b + 1
+            else:
+                break
+        want = max(want, common)
+    want = min(want, max(0, cut) // ps)
+    got = kv.match(probe, max_tokens=cut)
+    assert got.n_blocks == want

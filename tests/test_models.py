@@ -137,7 +137,8 @@ def test_moe_no_drop_equals_dense_mixture():
                               capacity_factor=4.0))
     params = init_params(moe_schema(cfg), jax.random.PRNGKey(0), 'float32')
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, cfg.d_model))
-    y, aux = moe_apply(params, x, cfg)
+    y, aux, drops = moe_apply(params, x, cfg)
+    assert int(drops) == 0
     # explicit reference mixture
     from repro.models.moe import router_probs
     xf = x.reshape(-1, cfg.d_model)
@@ -162,7 +163,7 @@ def test_moe_aux_loss_balanced_is_one():
     params = init_params(moe_schema(cfg), jax.random.PRNGKey(0), 'float32')
     params['router'] = jnp.zeros_like(params['router'])   # uniform probs
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, cfg.d_model))
-    _, aux = moe_apply(params, x, cfg)
+    _, aux, _ = moe_apply(params, x, cfg)
     assert 0.9 < float(aux) < 1.1
 
 

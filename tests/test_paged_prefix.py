@@ -1,0 +1,283 @@
+"""Paged-KV shared-prefix serving: differential matrix vs the dense engine.
+
+The hard contract mirrors the chunked-prefill one: an engine running the
+paged KV pool with prefix caching ON must produce **bit-identical tokens**
+to the dense (contiguous per-slot cache) engine — cold AND on cache hits —
+for every attention family: dense/GQA (global-only and sliding-window
+mixes, fp32 and int8-quant caches), MLA (+MoE), and hybrid attention∥mamba.
+Plus: copy-on-write partial-page reuse, eviction under pool pressure,
+scoring requests staying cold, and the MoE padding-lane masking / token-drop
+counter satellites.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import MLAConfig, ModelConfig, MoEConfig, SSMConfig
+from repro.models.layers import init_params
+from repro.models.moe import capacity, moe_apply, moe_schema
+from repro.serving import Request, ServingEngine
+from repro.models.model import Model
+
+PS = 8          # page size used throughout
+MAX_SEQ = 64
+
+
+def _cfg(kind):
+    base = dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                head_dim=16, d_ff=128, vocab_size=211, max_seq_len=256,
+                dtype='float32')
+    if kind == 'gqa':
+        return ModelConfig(name='paged-gqa', arch_class='dense', **base)
+    if kind == 'local':
+        return ModelConfig(name='paged-local', arch_class='dense',
+                           pattern=('global', 'local'), window=8, **base)
+    if kind == 'mla_moe':
+        return ModelConfig(
+            name='paged-mla-moe', arch_class='moe', num_layers=2,
+            d_model=64, num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128,
+            vocab_size=211, max_seq_len=256, dtype='float32',
+            tie_embeddings=False,
+            mla=MLAConfig(kv_lora_rank=16, q_lora_rank=0, qk_nope_dim=16,
+                          qk_rope_dim=8, v_head_dim=16),
+            moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=32,
+                          num_shared=1, first_dense_layers=1,
+                          capacity_factor=2.0))
+    if kind == 'hybrid':
+        return ModelConfig(
+            name='paged-hybrid', arch_class='hybrid', num_layers=2,
+            d_model=64, num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+            vocab_size=211, max_seq_len=256, dtype='float32',
+            pattern=('hybrid_global', 'hybrid'), window=8,
+            ssm=SSMConfig(conv_kernel=4, state_dim=8, num_ssm_heads=4))
+    raise ValueError(kind)
+
+
+def _build(kind):
+    cfg = _cfg(kind)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _mkreqs(cfg, prefix, seeds, tail=4, new_tokens=6):
+    out = []
+    for s in seeds:
+        t = np.random.default_rng(s).integers(3, cfg.vocab_size,
+                                              size=tail)
+        out.append(Request(uid=s,
+                           prompt=np.concatenate([prefix, t]),
+                           max_new_tokens=new_tokens))
+    return out
+
+
+def _prefix(cfg, n=24, seed=99):
+    return np.random.default_rng(seed).integers(3, cfg.vocab_size, size=n)
+
+
+@pytest.mark.parametrize('kind,quant', [
+    ('gqa', False), ('gqa', True), ('local', False),
+    ('mla_moe', False), ('hybrid', False),
+])
+def test_paged_bit_identical_to_dense(kind, quant):
+    """Cold and cache-hit paged serving == dense serving, token for token,
+    for both attention families and hybrid, incl. the int8 KV pool."""
+    cfg, model, params = _build(kind)
+    prefix = _prefix(cfg)
+    seeds = [7, 8, 9, 50, 51, 52]
+    dense = ServingEngine(model, params, max_slots=2, max_seq=MAX_SEQ,
+                          chunk_size=4, kv_quant=quant)
+    r_dense = _mkreqs(cfg, prefix, seeds)
+    for r in r_dense:
+        dense.submit(r)
+    dense.run()
+
+    paged = ServingEngine(model, params, max_slots=2, max_seq=MAX_SEQ,
+                          chunk_size=4, kv_quant=quant, prefix_cache=True,
+                          page_size=PS)
+    wave1 = _mkreqs(cfg, prefix, seeds[:3])
+    wave2 = _mkreqs(cfg, prefix, seeds[3:])
+    for r in wave1:
+        paged.submit(r)
+    paged.run()
+    for r in wave2:
+        paged.submit(r)
+    paged.run()
+
+    for a, b in zip(r_dense, wave1 + wave2):
+        assert a.generated == b.generated, \
+            f'{kind} uid={a.uid}: {a.generated} != {b.generated}'
+    st = paged.stats(wave1 + wave2)
+    assert st['prefix_hits'] >= 3           # all of wave 2 at minimum
+    assert st['prefix_hit_tokens'] >= 3 * (len(prefix) // PS) * PS
+    assert st['moe_token_drops'] == 0
+
+
+def test_paged_cow_partial_page():
+    """A prompt that stops short inside a cached page reuses its head rows
+    through copy-on-write — and still matches the dense engine bitwise."""
+    cfg, model, params = _build('gqa')
+    prefix = _prefix(cfg)                      # 24 tokens = 3 pages
+    warm = _mkreqs(cfg, prefix, [7])
+    # prompt == prefix exactly: cap to P-1 = 23 -> 2 shared pages + 7 COW rows
+    probe_p = Request(uid=1, prompt=prefix.copy(), max_new_tokens=6)
+    probe_d = Request(uid=1, prompt=prefix.copy(), max_new_tokens=6)
+
+    paged = ServingEngine(model, params, max_slots=1, max_seq=MAX_SEQ,
+                          chunk_size=4, prefix_cache=True, page_size=PS)
+    for r in warm:
+        paged.submit(r)
+    paged.run()
+    paged.submit(probe_p)
+    paged.run()
+
+    dense = ServingEngine(model, params, max_slots=1, max_seq=MAX_SEQ,
+                          chunk_size=4)
+    dense.submit(probe_d)
+    dense.run()
+    assert probe_p.generated == probe_d.generated
+    assert probe_p.prefix_hit_tokens == 23     # 16 shared + 7 COW rows
+
+
+def test_paged_chunk_one_engine():
+    """chunk_size=1 paged engines run the T=1 chunk program throughout and
+    still share prefixes."""
+    cfg, model, params = _build('gqa')
+    prefix = _prefix(cfg, n=16)
+    dense = ServingEngine(model, params, max_slots=2, max_seq=MAX_SEQ)
+    paged = ServingEngine(model, params, max_slots=2, max_seq=MAX_SEQ,
+                          prefix_cache=True, page_size=PS)
+    r_d = _mkreqs(cfg, prefix, [3, 4])
+    r_p = _mkreqs(cfg, prefix, [3, 4])
+    for r in r_d:
+        dense.submit(r)
+    for r in r_p:
+        paged.submit(r)
+    dense.run()
+    paged.run()
+    for a, b in zip(r_d, r_p):
+        assert a.generated == b.generated
+
+
+def test_paged_eviction_under_pressure_stays_correct():
+    """A pool too small to cache every prefix evicts cold chains (never
+    attached ones) and keeps producing dense-identical tokens."""
+    cfg, model, params = _build('gqa')
+    # each wave keeps 2 slots x 5 blocks (28-token prompt + 6 generated) in
+    # flight and leaves 3 prefix pages cached; 14 usable pages fit two
+    # waves' residue at most, so wave 3+ must evict cold chains
+    paged = ServingEngine(model, params, max_slots=2, max_seq=MAX_SEQ,
+                          chunk_size=4, prefix_cache=True, page_size=PS,
+                          num_pages=15)
+    dense = ServingEngine(model, params, max_slots=2, max_seq=MAX_SEQ,
+                          chunk_size=4)
+    reqs_p, reqs_d = [], []
+    for wave in range(4):                      # distinct prefixes -> churn
+        prefix = _prefix(cfg, n=24, seed=1000 + wave)
+        rp = _mkreqs(cfg, prefix, [2 * wave, 2 * wave + 1])
+        rd = _mkreqs(cfg, prefix, [2 * wave, 2 * wave + 1])
+        for r in rp:
+            paged.submit(r)
+        paged.run()
+        reqs_p += rp
+        reqs_d += rd
+    for r in reqs_d:
+        dense.submit(r)
+    dense.run()
+    for a, b in zip(reqs_d, reqs_p):
+        assert a.generated == b.generated
+    assert paged.stats(reqs_p)['evictions'] > 0
+
+
+def test_paged_scoring_stays_cold_and_complete():
+    """return_logits requests never attach a prefix (their logits must
+    cover every position) and match the dense engine's scores exactly."""
+    cfg, model, params = _build('gqa')
+    prefix = _prefix(cfg)
+    prompt = np.concatenate([prefix, np.asarray([5, 6, 7])])
+    paged = ServingEngine(model, params, max_slots=2, max_seq=MAX_SEQ,
+                          chunk_size=4, prefix_cache=True, page_size=PS)
+    warm = _mkreqs(cfg, prefix, [7])
+    for r in warm:
+        paged.submit(r)
+    paged.run()
+    got = paged.score([prompt])[0]
+    want = ServingEngine(model, params, max_slots=2, max_seq=MAX_SEQ,
+                         chunk_size=4).score([prompt])[0]
+    assert got.shape == (len(prompt), cfg.vocab_size)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_paged_rejects_unpageable_configs():
+    cfg, model, params = _build('gqa')
+    with pytest.raises(ValueError):            # max_seq not page-aligned
+        ServingEngine(model, params, max_slots=1, max_seq=60,
+                      prefix_cache=True, page_size=PS)
+
+
+# ========================================================= MoE lane masking
+def _moe_cfg(cf=0.25):
+    return ModelConfig(name='moe-mask', arch_class='moe', num_layers=1,
+                       d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
+                       d_ff=64, vocab_size=64, max_seq_len=64,
+                       dtype='float32',
+                       moe=MoEConfig(num_experts=4, top_k=1, d_ff_expert=16,
+                                     capacity_factor=cf))
+
+
+def test_moe_lane_mask_blocks_displacement_and_counts_drops():
+    """Garbage (padding / free-slot) lanes must not consume expert capacity:
+    with every lane herded onto one expert, unmasked garbage displaces real
+    tokens; masked, the real tokens keep their capacity rows and the drop
+    counter reports exactly the real overflow."""
+    cfg = _moe_cfg()
+    params = init_params(moe_schema(cfg), jax.random.PRNGKey(0), 'float32')
+    params['router'] = jnp.zeros_like(params['router'])   # all -> expert 0
+    B, T = 4, 4
+    N, C = B * T, capacity(B * T, cfg.moe)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.d_model))
+    # real tokens only in the first 2 lanes of each row: 8 real, 8 garbage
+    mask = jnp.arange(T)[None, :] < 2
+    mask = jnp.broadcast_to(mask, (B, T))
+    _, _, drops_all = moe_apply(params, x, cfg)
+    assert int(drops_all) == N - C                       # 16 routed, 8 fit
+    y, _, drops = moe_apply(params, x, cfg, lane_mask=mask)
+    assert int(drops) == 0                               # 8 real <= C
+    # masked lanes produce exactly zero (null expert, no shared FFN here)
+    np.testing.assert_array_equal(
+        np.asarray(y)[~np.asarray(mask)], 0.0)
+    # and the valid lanes are invariant to garbage-lane contents
+    x2 = x.at[:, 2:].set(jax.random.normal(jax.random.PRNGKey(2),
+                                           (B, 2, cfg.d_model)))
+    y2, _, _ = moe_apply(params, x2, cfg, lane_mask=mask)
+    np.testing.assert_array_equal(np.asarray(y)[np.asarray(mask)],
+                                  np.asarray(y2)[np.asarray(mask)])
+
+
+def test_moe_lane_mask_noop_without_overflow():
+    """With ample capacity the mask only zeroes garbage lanes — real-lane
+    outputs are bitwise those of the unmasked call."""
+    cfg = _moe_cfg(cf=4.0)
+    params = init_params(moe_schema(cfg), jax.random.PRNGKey(0), 'float32')
+    B, T = 2, 5
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.d_model))
+    mask = jnp.asarray(np.array([[1, 1, 1, 0, 0], [1, 0, 0, 0, 0]],
+                                bool))
+    y_all, _, d0 = moe_apply(params, x, cfg)
+    y_msk, _, d1 = moe_apply(params, x, cfg, lane_mask=mask)
+    assert int(d0) == 0 and int(d1) == 0
+    np.testing.assert_array_equal(np.asarray(y_msk)[np.asarray(mask)],
+                                  np.asarray(y_all)[np.asarray(mask)])
+
+
+def test_engine_reports_moe_drop_counter():
+    cfg, model, params = _build('mla_moe')
+    eng = ServingEngine(model, params, max_slots=2, max_seq=MAX_SEQ,
+                        chunk_size=4, prefix_cache=True, page_size=PS)
+    reqs = _mkreqs(cfg, _prefix(cfg), [1, 2])
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    st = eng.stats(reqs)
+    assert 'moe_token_drops' in st and st['moe_token_drops'] == 0

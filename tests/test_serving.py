@@ -112,6 +112,27 @@ def test_eos_stops_generation():
     assert r.generated[-1] == eos and len(r.generated) < 32
 
 
+def test_audio_engine_still_serves():
+    """Audio enc-dec serving rides the one-token step (no chunk slot, no
+    paged mode) — the engine's stats-returning programs must keep that path
+    alive, and prefix_cache must be rejected cleanly."""
+    import pytest
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config('whisper_tiny')
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, max_slots=2, max_seq=64)
+    reqs = [Request(uid=i, prompt=np.arange(3, 8) + i, max_new_tokens=4)
+            for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done and len(r.generated) == 4 for r in reqs)
+    assert eng.stats(reqs)['moe_token_drops'] == 0
+    with pytest.raises(ValueError):
+        ServingEngine(model, params, prefix_cache=True)
+
+
 def test_int8_cache_engine_matches_baseline_tokens():
     """Greedy generation with the int8 KV cache matches the exact cache
     (quantisation noise below greedy decision boundaries for a small model)."""
