@@ -62,4 +62,33 @@ def bench_kernels() -> List[Tuple[str, float, str]]:
     rows.append(('kernel/gather_rope_unfused_us', t_unf,
                  f'jnp take+rope oracle, speedup='
                  f'{t_unf / max(t_fused, 1e-9):.2f}x'))
+
+    # paged decode attention: in-place page reads (the pallas backend) vs
+    # the reference path's gather-a-dense-view-then-attend. On CPU the
+    # kernel runs in interpret mode, so only the gather number is
+    # hardware-meaningful here; on TPU this row measures the win of
+    # dropping the per-layer page gather from the paged decode step.
+    B, T, KV, G, d, ps, P = 2, 4, 2, 2, 32, 16, 4
+    NP = 1 + B * P
+    kk = jax.random.PRNGKey(8)
+    q = jax.random.normal(kk, (B, T, KV, G, d))
+    kp = jax.random.normal(jax.random.fold_in(kk, 1), (NP, ps, KV, d))
+    vp = jax.random.normal(jax.random.fold_in(kk, 2), (NP, ps, KV, d))
+    cpos = jnp.where(
+        jnp.arange(NP)[:, None] > 0,
+        jnp.arange(ps)[None] + ((jnp.arange(NP)[:, None] - 1) % P) * ps,
+        -1).astype(jnp.int32)
+    tbl = jnp.arange(B * P, dtype=jnp.int32).reshape(B, P) + 1
+    pos0 = jnp.full((B,), P * ps - 1, jnp.int32)
+    kw = dict(scale=d ** -0.5)
+    t_inplace = _t(lambda *a: ops.paged_attend(*a, **kw),
+                   q, kp, vp, cpos, tbl, pos0)
+    t_gather = _t(jax.jit(lambda *a: ref.paged_attention_ref(*a, **kw)),
+                  q, kp, vp, cpos, tbl, pos0)
+    rows.append(('kernel/paged_attend_inplace_us', t_inplace,
+                 f'Pallas in-place pages, B={B} T={T} {P}x{ps}-token pages '
+                 f'({"interpret" if jax.default_backend() != "tpu" else "compiled"})'))
+    rows.append(('kernel/paged_attend_gather_us', t_gather,
+                 f'gather dense view + attend oracle, in-place speedup='
+                 f'{t_gather / max(t_inplace, 1e-9):.2f}x'))
     return rows

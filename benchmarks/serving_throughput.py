@@ -11,12 +11,15 @@ Three workloads:
   chunked prefill vs a prefix-cache hit (the shared pages attach, only the
   tail prefills), with token outputs asserted bit-identical to the dense
   engine.
+- **recurrent-mla** (universal-chunking coverage): the same prompt-heavy
+  TTFT comparison on a hybrid attention∥mamba stack and an MLA stack —
+  the chunk paths that are NOT plain dense GQA, so regressions in the
+  masked-state scan or the latent chunk write show up in the trajectory.
 
-``bench_serving_prompt_heavy`` / ``bench_shared_prefix`` merge their
-sections into ``BENCH_serving.json`` (repo root) so the perf trajectory is
-machine-readable across PRs:
+Each workload merges its section into ``BENCH_serving.json`` (repo root)
+so the perf trajectory is machine-readable across PRs:
 ``PYTHONPATH=src python -m benchmarks.serving_throughput
-[--workload shared-prefix] [--smoke]``.
+[--workload shared-prefix|recurrent-mla] [--smoke]``.
 """
 from __future__ import annotations
 
@@ -28,7 +31,7 @@ from typing import Dict, List, Tuple
 import jax
 import numpy as np
 
-from repro.config import ModelConfig
+from repro.config import MLAConfig, ModelConfig, SSMConfig
 from repro.models.model import Model
 from repro.serving import Request, ServingEngine
 
@@ -247,11 +250,64 @@ def bench_shared_prefix(prefix_len: int = 128, tail_len: int = 8,
     ]
 
 
+def _recurrent_mla_models(n_layers: int = 2):
+    base = dict(num_layers=n_layers, d_model=128, num_heads=4,
+                num_kv_heads=4, head_dim=32, d_ff=256, vocab_size=2048,
+                max_seq_len=256, dtype='float32')
+    hybrid = ModelConfig(name='bench-hybrid', arch_class='hybrid',
+                         pattern=('hybrid_global', 'hybrid'), window=16,
+                         ssm=SSMConfig(conv_kernel=4, state_dim=8,
+                                       num_ssm_heads=4), **base)
+    mla = ModelConfig(name='bench-mla', arch_class='dense',
+                      tie_embeddings=False,
+                      mla=MLAConfig(kv_lora_rank=32, q_lora_rank=0,
+                                    qk_nope_dim=32, qk_rope_dim=16,
+                                    v_head_dim=32), **base)
+    return [('hybrid', hybrid), ('mla', mla)]
+
+
+def bench_recurrent_mla(prompt_len: int = 96, new_tokens: int = 4,
+                        chunk_size: int = 32, n_req: int = 6,
+                        n_layers: int = 2, repeats: int = 3,
+                        write_json: bool = True
+                        ) -> List[Tuple[str, float, str]]:
+    """Prompt-heavy TTFT on the non-GQA chunk paths: hybrid attn∥mamba
+    (masked-state chunk scan) and MLA (whole-chunk latent cache writes)."""
+    rows: List[Tuple[str, float, str]] = []
+    payload: Dict[str, Dict] = {
+        'workload': {'prompt_len': prompt_len, 'new_tokens': new_tokens,
+                     'n_req': n_req, 'chunk_size': chunk_size,
+                     'repeats': repeats,
+                     'model': f'{n_layers}L d=128 fp32 CPU'}}
+    for name, cfg in _recurrent_mla_models(n_layers):
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        kw = dict(n_req=n_req, prompt_len=prompt_len, new_tokens=new_tokens,
+                  max_seq=256, repeats=repeats)
+        seed_eng = _engine_run(model, params, chunk_size=1, **kw)
+        chunked = _engine_run(model, params, chunk_size=chunk_size, **kw)
+        speedup = seed_eng['mean_ttft_s'] / max(chunked['mean_ttft_s'], 1e-9)
+        payload[name] = {'seed_token_by_token': seed_eng,
+                         'chunked': chunked, 'ttft_speedup': speedup}
+        rows += [
+            (f'serving/recurrent_mla_{name}_seed_ttft_us',
+             seed_eng['mean_ttft_s'] * 1e6,
+             f'P={prompt_len} G={new_tokens} token-by-token'),
+            (f'serving/recurrent_mla_{name}_chunked_ttft_us',
+             chunked['mean_ttft_s'] * 1e6,
+             f'chunk={chunk_size} speedup={speedup:.2f}x'),
+        ]
+    if write_json:
+        _merge_json('recurrent_mla', payload)
+    return rows
+
+
 if __name__ == '__main__':
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument('--workload', default='prompt-heavy',
-                    choices=['prompt-heavy', 'shared-prefix'])
+                    choices=['prompt-heavy', 'shared-prefix',
+                             'recurrent-mla'])
     ap.add_argument('--smoke', action='store_true',
                     help='small CI workload: 2 layers, short prompts — '
                          'tracks the TTFT trajectory across PRs without '
@@ -265,6 +321,13 @@ if __name__ == '__main__':
                                        n_layers=2, repeats=2)
         else:
             rows = bench_shared_prefix()
+    elif args.workload == 'recurrent-mla':
+        if args.smoke:
+            rows = bench_recurrent_mla(prompt_len=32, new_tokens=2,
+                                       chunk_size=8, n_req=2, n_layers=2,
+                                       repeats=2)
+        else:
+            rows = bench_recurrent_mla()
     elif args.smoke:
         rows = bench_serving_prompt_heavy(prompt_len=48, new_tokens=2,
                                           chunk_size=16, n_req=3,

@@ -3,6 +3,11 @@ batched requests through the continuous-batching engine, baseline vs
 precomputed-first-layer, with identical greedy outputs and timing comparison.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
+
+For paged shared-prefix serving and the in-place Pallas attention backend,
+see the full driver:
+    PYTHONPATH=src python -m repro.launch.serve --prefix-cache \
+        --shared-prefix 64 --attn-backend pallas
 """
 import sys
 sys.path.insert(0, 'src')

@@ -1,11 +1,16 @@
-"""Pallas TPU kernel: single-token decode attention over a (ring) KV cache.
+"""Single-token decode attention over a (ring) KV cache.
 
-The decode hot loop is memory-bandwidth-bound (the whole cache streams
-HBM->VMEM once per step) — the same regime the paper's precompute targets for
-the first layer. Grid (batch, kv_heads, cache_blocks); fp32 running-softmax
-scratch persists across cache blocks; validity comes from the cache's stored
-positions (-1 = empty), which makes ring-buffer wraparound and sliding-window
-masking uniform.
+Since the unified attention-backend refactor this is the *identity-table,
+T=1 case* of :mod:`repro.kernels.paged_attention`: the dense ``(B, Sc, ...)``
+cache is viewed in place as ``Sc / block_s`` pages per slot (a free reshape),
+the page table is ``table[b, j] = b * n + j``, and the shared kernel streams
+each block HBM->VMEM with fp32 running-softmax scratch. Validity still comes
+from the cache's stored positions (-1 = empty) via the shared
+:func:`~repro.kernels.paged_attention.page_validity` helper, which makes
+ring-buffer wraparound and sliding-window masking uniform.
+
+The decode hot loop is memory-bandwidth-bound (the whole cache streams once
+per step) — the same regime the paper's precompute targets for layer 0.
 """
 from __future__ import annotations
 
@@ -13,47 +18,12 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -2.0 ** 30
+from repro.kernels.paged_attention import (NEG_INF, dense_as_pages,
+                                           dense_identity_table,
+                                           page_validity, paged_attention)
 
-
-def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, cpos_ref, o_ref,
-                   m_scr, l_scr, acc_scr, *, bs, n_s, window):
-    sj = pl.program_id(2)
-
-    @pl.when(sj == 0)
-    def _init():
-        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
-        l_scr[...] = jnp.zeros_like(l_scr)
-        acc_scr[...] = jnp.zeros_like(acc_scr)
-
-    q = q_ref[0, 0].astype(jnp.float32)                     # (G, d)
-    k = k_ref[0, :, 0].astype(jnp.float32)                  # (bs, d)
-    v = v_ref[0, :, 0].astype(jnp.float32)                  # (bs, d)
-    cp = cpos_ref[0]                                        # (bs,) int32
-    pos = pos_ref[0]
-    d = q.shape[-1]
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * d ** -0.5
-    valid = (cp >= 0) & (cp <= pos)
-    if window:
-        valid &= (pos - cp) < window
-    s = jnp.where(valid[None, :], s, NEG_INF)
-    m_prev = m_scr[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
-    p = jnp.exp(s - m_new[:, None])
-    p = jnp.where(valid[None, :], p, 0.0)
-    corr = jnp.exp(m_prev - m_new)
-    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
-    acc_scr[...] = acc_scr[...] * corr[:, None] + jnp.dot(
-        p, v, preferred_element_type=jnp.float32)
-    m_scr[...] = m_new
-
-    @pl.when(sj == n_s - 1)
-    def _finalize():
-        l = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+__all__ = ['decode_attention', 'page_validity', 'NEG_INF']
 
 
 @functools.partial(jax.jit, static_argnames=('window', 'block_s',
@@ -68,26 +38,13 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     Sc, KH = k_cache.shape[1], k_cache.shape[2]
     G = H // KH
     bs = min(block_s, Sc)
-    n_s = Sc // bs
-
-    qg = q.reshape(B, KH, G, d)
-    out = pl.pallas_call(
-        functools.partial(_decode_kernel, bs=bs, n_s=n_s, window=window),
-        grid=(B, KH, n_s),
-        in_specs=[
-            pl.BlockSpec((1,), lambda b, h, j: (b,)),
-            pl.BlockSpec((1, 1, G, d), lambda b, h, j: (b, h, 0, 0)),
-            pl.BlockSpec((1, bs, 1, d), lambda b, h, j: (b, j, h, 0)),
-            pl.BlockSpec((1, bs, 1, d), lambda b, h, j: (b, j, h, 0)),
-            pl.BlockSpec((1, bs), lambda b, h, j: (b, j)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, G, d), lambda b, h, j: (b, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, KH, G, d), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((G,), jnp.float32),
-            pltpu.VMEM((G,), jnp.float32),
-            pltpu.VMEM((G, d), jnp.float32),
-        ],
-        interpret=interpret,
-    )(pos, qg, k_cache, v_cache, cache_pos)
+    qg = q.reshape(B, 1, KH, G, d)
+    out = paged_attention(
+        qg,
+        dense_as_pages(k_cache, bs),
+        dense_as_pages(v_cache, bs),
+        dense_as_pages(cache_pos, bs),
+        dense_identity_table(B, Sc, bs),
+        pos.astype(jnp.int32),
+        scale=d ** -0.5, window=window, interpret=interpret)
     return out.reshape(B, H, d)

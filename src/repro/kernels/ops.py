@@ -18,6 +18,7 @@ from repro.kernels.gather_rope import gather_rope
 from repro.kernels.rmsnorm_qkv import rmsnorm_matmul
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.decode_attention import decode_attention
+from repro.kernels.paged_attention import paged_attention
 
 
 def _interpret() -> bool:
@@ -92,6 +93,24 @@ def flash_attention_bshd(q: jax.Array, k: jax.Array, v: jax.Array, *,
                           block_q=block, block_k=block,
                           interpret=_interpret())
     return out[:, :S]
+
+
+def paged_attend(q: jax.Array, k_pages: jax.Array, v_pages, cpos_pages,
+                 table: jax.Array, pos0: jax.Array, *, scale: float,
+                 window: int = 0, k2_pages=None, k_scale_pages=None,
+                 v_scale_pages=None, mla_split: int = 0) -> jax.Array:
+    """In-place paged/chunked attention over the global KV pool.
+
+    q (B,T,KV,G,dq) against page-pool storage (NP,ps,KV,·) through a
+    per-slot (B,P) page table -> (B,T,KV,G,dv). Never gathers a dense
+    virtual cache; see kernels/paged_attention.py for the variants
+    (``mla_split``, int8 scales).
+    """
+    return paged_attention(q, k_pages, v_pages, cpos_pages, table, pos0,
+                           scale=scale, window=window, k2_pages=k2_pages,
+                           k_scale_pages=k_scale_pages,
+                           v_scale_pages=v_scale_pages, mla_split=mla_split,
+                           interpret=_interpret())
 
 
 def decode_attention_cache(q: jax.Array, k_cache: jax.Array,

@@ -1,0 +1,228 @@
+"""Pallas TPU kernel: in-place paged/chunked decode attention.
+
+The serving engine's decode hot loop is memory-bandwidth-bound: every step
+streams the whole KV working set HBM->VMEM once. The reference paged path
+pays that twice — it first *gathers* each slot's pages into a dense-shaped
+``(B, Sc, ...)`` virtual cache per layer per step, then attends over the
+copy. This kernel removes the copy: the grid runs over
+``(batch, kv_heads, pages)`` and each step DMAs ONE physical page of the
+global pool straight into VMEM through the per-slot page table (the table
+is scalar-prefetched, so page ``j``'s DMA is issued before the body runs).
+
+It also removes the reference path's query-lane serialisation: all T query
+lanes of a prefill chunk are batched into a single dispatch (one
+``(T*G, page)`` score block per page) instead of a per-lane loop. fp32
+running-softmax scratch persists across the page axis; entry validity comes
+from the pool's stored positions (``-1`` = never written), which makes ring
+wraparound, sliding windows, unaligned final pages and null-page table
+entries all the same test — see :func:`page_validity`, shared with the
+single-token dense kernel (``decode_attention.py`` is the identity-table
+T=1 case of this kernel).
+
+Variants (static flags):
+- ``quant``: int8 K/V pages with per-(token, head) scales folded into the
+  scores and the value mix, matching ``attention._attend_lanes``' order.
+- ``mla_split > 0``: MLA latent attention — query rows are
+  ``[q_absorbed | q_pe]``, scores are ``q_abs·ckv^T + q_pe·kpe^T`` and the
+  value mix re-reads the ckv pages (MLA caches no separate V).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30   # large-negative that survives bf16
+
+
+def page_validity(cpos: jax.Array, pos_t: jax.Array, window: int
+                  ) -> jax.Array:
+    """(ps,) stored positions x (T,) query positions -> (T, ps) validity.
+
+    A cache entry is attendable iff it was ever written (``pos >= 0``), is
+    causal history for the query (``stored <= query``) and, on sliding-window
+    layers, still inside the window. Ring wraparound, unaligned final pages
+    and null-page reads need no special cases: all of them surface as
+    ``pos == -1`` or out-of-window stored positions.
+    """
+    v = (cpos[None, :] >= 0) & (cpos[None, :] <= pos_t[:, None])
+    if window:
+        v &= (pos_t[:, None] - cpos[None, :]) < window
+    return v
+
+
+def _paged_kernel(pos0_ref, table_ref, q_ref, *refs, n_j, window, scale,
+                  quant, mla_split):
+    refs = list(refs)
+    k_ref = refs.pop(0)
+    if mla_split:
+        k2_ref = refs.pop(0)
+        v_ref = k_ref                 # MLA: the value mix re-reads ckv
+    else:
+        v_ref = refs.pop(0)
+    if quant:
+        ks_ref = refs.pop(0)
+        vs_ref = refs.pop(0)
+    cpos_ref = refs.pop(0)
+    o_ref, m_scr, l_scr, acc_scr = refs
+
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0].astype(jnp.float32)                  # (T, G, dq)
+    T, G, dq = q.shape
+    q2 = q.reshape(T * G, dq)
+    cp = cpos_ref[0]                                        # (ps,) int32
+    ps = cp.shape[0]
+    pos_t = pos0_ref[b] + jax.lax.broadcasted_iota(jnp.int32, (T, 1), 0)[:, 0]
+    valid = page_validity(cp, pos_t, window)                # (T, ps)
+    valid = jnp.broadcast_to(valid[:, None, :], (T, G, ps)) \
+        .reshape(T * G, ps)
+
+    if mla_split:
+        k1 = k_ref[0, :, 0].astype(jnp.float32)             # (ps, r)
+        k2 = k2_ref[0, :, 0].astype(jnp.float32)            # (ps, dr)
+        s = jnp.dot(q2[:, :mla_split], k1.T,
+                    preferred_element_type=jnp.float32) \
+            + jnp.dot(q2[:, mla_split:], k2.T,
+                      preferred_element_type=jnp.float32)
+        v = k1
+    else:
+        k = k_ref[0, :, 0].astype(jnp.float32)              # (ps, dk)
+        s = jnp.dot(q2, k.T, preferred_element_type=jnp.float32)
+        if quant:
+            s = s * ks_ref[0, :, 0].astype(jnp.float32)[None, :]
+        v = v_ref[0, :, 0].astype(jnp.float32)              # (ps, dv)
+    s = s * scale
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(valid, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+    if quant:
+        p = p * vs_ref[0, :, 0].astype(jnp.float32)[None, :]
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == n_j - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0] = (acc_scr[...] / l[:, None]) \
+            .reshape(T, G, -1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=('scale', 'window', 'mla_split',
+                                             'interpret'))
+def paged_attention(q: jax.Array, k_pages: jax.Array,
+                    v_pages: jax.Array | None, cpos_pages: jax.Array,
+                    table: jax.Array, pos0: jax.Array, *, scale: float,
+                    window: int = 0, k2_pages: jax.Array | None = None,
+                    k_scale_pages: jax.Array | None = None,
+                    v_scale_pages: jax.Array | None = None,
+                    mla_split: int = 0, interpret: bool = True) -> jax.Array:
+    """In-place paged attention of a whole query chunk.
+
+    q           (B, T, KV, G, dq)   post-RoPE queries; lane t at pos0 + t
+    k_pages     (NP, ps, KV, dk)    global pool (MLA: ckv with KV == 1)
+    v_pages     (NP, ps, KV, dv)    global pool (None when ``mla_split``)
+    cpos_pages  (NP, ps)            stored positions (-1 = empty)
+    table       (B, P) int32        physical page of each slot's block
+    pos0        (B,) int32          first query lane's position
+    -> (B, T, KV, G, dv) context, dv = value width.
+
+    ``mla_split = r`` switches to the MLA form: q rows are
+    ``[q_abs (r) | q_pe (dr)]``, ``k2_pages`` holds the kpe pool and the
+    value mix reads ``k_pages`` (ckv) again. ``k/v_scale_pages``
+    (NP, ps, KV) enable the int8 pool. The kernel never materialises a
+    gathered cache: page ``table[b, j]`` is read in place on grid step j.
+    """
+    B, T, KV, G, dq = q.shape
+    NP, ps = k_pages.shape[:2]
+    P = table.shape[1]
+    quant = k_scale_pages is not None
+    dv = mla_split if mla_split else v_pages.shape[-1]
+
+    def page_spec(dk):
+        return pl.BlockSpec((1, ps, 1, dk),
+                            lambda b, h, j, pos0_ref, tab: (tab[b, j], 0, h, 0))
+
+    in_specs = [
+        pl.BlockSpec((1, T, 1, G, dq),
+                     lambda b, h, j, pos0_ref, tab: (b, 0, h, 0, 0)),
+        page_spec(k_pages.shape[-1]),
+    ]
+    operands = [q, k_pages]
+    if mla_split:
+        in_specs.append(page_spec(k2_pages.shape[-1]))
+        operands.append(k2_pages)
+    else:
+        in_specs.append(page_spec(v_pages.shape[-1]))
+        operands.append(v_pages)
+    if quant:
+        sc_spec = pl.BlockSpec((1, ps, 1),
+                               lambda b, h, j, pos0_ref, tab: (tab[b, j], 0, h))
+        in_specs += [sc_spec, sc_spec]
+        operands += [k_scale_pages, v_scale_pages]
+    in_specs.append(pl.BlockSpec((1, ps),
+                                 lambda b, h, j, pos0_ref, tab: (tab[b, j], 0)))
+    operands.append(cpos_pages)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                    # pos0, table
+        grid=(B, KV, P),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, T, 1, G, dv),
+                               lambda b, h, j, pos0_ref, tab: (b, 0, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((T * G,), jnp.float32),
+            pltpu.VMEM((T * G,), jnp.float32),
+            pltpu.VMEM((T * G, dv), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_kernel, n_j=P, window=window,
+                               scale=float(scale), quant=quant,
+                               mla_split=mla_split)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, KV, G, dv), q.dtype),
+        interpret=interpret,
+    )(pos0.astype(jnp.int32), table.astype(jnp.int32), *operands)
+
+
+def dense_page_split(Sc: int, max_page: int = 128) -> int:
+    """Page size for viewing a dense (B, Sc, ...) cache as pages in place.
+
+    Picks the largest power-of-two block <= ``max_page`` that divides Sc so
+    the reshape to (B * Sc/ps, ps, ...) is free (no pad copy). Falls back to
+    1 for odd ring lengths — still correct, just a deeper grid.
+    """
+    for bs in (max_page, 64, 32, 16, 8, 4, 2):
+        if bs <= Sc and Sc % bs == 0:
+            return bs
+    return 1
+
+
+def dense_as_pages(leaf: jax.Array, ps: int) -> jax.Array:
+    """(B, Sc, ...) -> (B * Sc/ps, ps, ...) page view — a pure reshape."""
+    B, Sc = leaf.shape[:2]
+    return leaf.reshape((B * (Sc // ps), ps) + leaf.shape[2:])
+
+
+def dense_identity_table(B: int, Sc: int, ps: int) -> jax.Array:
+    """Page table mapping slot b's block j to physical page b * P + j."""
+    P = Sc // ps
+    return jnp.arange(B * P, dtype=jnp.int32).reshape(B, P)

@@ -80,6 +80,62 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return o.reshape(B, S, H, d).astype(q.dtype)
 
 
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
+                        v_pages: Optional[jax.Array], cpos_pages: jax.Array,
+                        table: jax.Array, pos0: jax.Array, *, scale: float,
+                        window: int = 0,
+                        k2_pages: Optional[jax.Array] = None,
+                        k_scale_pages: Optional[jax.Array] = None,
+                        v_scale_pages: Optional[jax.Array] = None,
+                        mla_split: int = 0) -> jax.Array:
+    """Gather-based oracle for the in-place paged kernel: materialise each
+    slot's pages as a dense virtual cache (what the reference backend's
+    ``paged_view`` does), then run plain masked-softmax attention over it.
+
+    Same contract as ``paged_attention.paged_attention``:
+    q (B,T,KV,G,dq), pages (NP,ps,KV,·), table (B,P), pos0 (B,)
+    -> (B,T,KV,G,dv). ``mla_split``/``k2_pages`` enable the MLA form and
+    ``k/v_scale_pages`` the int8 pool.
+    """
+    B, T = q.shape[:2]
+    P, ps = table.shape[1], k_pages.shape[1]
+
+    def virt(pages):                                  # (B, P*ps, KV, ·)
+        g = pages[table]
+        return g.reshape((B, P * ps) + pages.shape[2:])
+
+    qf = q.astype(jnp.float32)
+    cp = cpos_pages[table].reshape(B, P * ps)
+    pos_t = pos0[:, None].astype(jnp.int32) + jnp.arange(T, dtype=jnp.int32)
+    if mla_split:
+        k1 = virt(k_pages).astype(jnp.float32)        # (B,S,1,r)
+        k2 = virt(k2_pages).astype(jnp.float32)       # (B,S,1,dr)
+        s = jnp.einsum('btkgd,bskd->bkgts', qf[..., :mla_split], k1) \
+            + jnp.einsum('btkgd,bskd->bkgts', qf[..., mla_split:], k2)
+        v = k1
+    else:
+        k = virt(k_pages).astype(jnp.float32)
+        s = jnp.einsum('btkgd,bskd->bkgts', qf, k)
+        if k_scale_pages is not None:
+            ks = virt(k_scale_pages).astype(jnp.float32)      # (B,S,KV)
+            s = s * ks.transpose(0, 2, 1)[:, :, None, None, :]
+        v = virt(v_pages).astype(jnp.float32)
+    s = s * scale
+    cpq = cp[:, None, None, None, :]
+    qpq = pos_t[:, None, None, :, None]
+    valid = (cpq >= 0) & (cpq <= qpq)
+    if window:
+        valid &= (qpq - cpq) < window
+    s = jnp.where(valid, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid, p, 0.0)                      # empty rows -> zeros
+    if v_scale_pages is not None:
+        vs = virt(v_scale_pages).astype(jnp.float32)
+        p = p * vs.transpose(0, 2, 1)[:, :, None, None, :]
+    o = jnp.einsum('bkgts,bskd->btkgd', p, v)
+    return o.astype(q.dtype)
+
+
 def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                          cache_pos: jax.Array, pos: jax.Array, *,
                          window: int = 0) -> jax.Array:

@@ -3,6 +3,10 @@ engine, with the paper's precomputed first layer ON by default.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b \
         --requests 8 --no-precompute   # baseline comparison
+
+    # paged serving with the in-place Pallas attention kernel
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b \
+        --prefix-cache --shared-prefix 64 --attn-backend pallas
 """
 from __future__ import annotations
 
@@ -53,6 +57,17 @@ def main() -> None:
                     help='prepend a common system prompt of this many '
                          'tokens to every request (demonstrates the '
                          'prefix-cache hit rate)')
+    ap.add_argument('--attn-backend', default='reference',
+                    choices=['reference', 'pallas'],
+                    help='attention backend for every decode attend: '
+                         '"reference" keeps the lane-at-a-time bit-identity '
+                         'oracle (paged mode gathers a dense view per '
+                         'layer); "pallas" runs the in-place paged/chunked '
+                         'attention kernel — pages are read straight from '
+                         'the pool through the page table and all chunk '
+                         'query lanes are batched into one dispatch '
+                         '(compiled on TPU, interpret mode on CPU; outputs '
+                         'match reference to fp32 tolerance, not bitwise)')
     ap.add_argument('--seed', type=int, default=0)
     args = ap.parse_args()
 
@@ -74,13 +89,17 @@ def main() -> None:
                         fused_gather_rope=args.fused_gather_rope,
                         prefix_cache=args.prefix_cache,
                         page_size=args.page_size,
-                        num_pages=args.num_pages or None)
+                        num_pages=args.num_pages or None,
+                        attn_backend=args.attn_backend)
     if eng.chunk_size > 1:
         print(f'chunked prefill: {eng.chunk_size} tokens/dispatch'
               + (' + fused gather→RoPE' if eng.fused_gather_rope else ''))
     if eng.paged:
         print(f'paged KV: {eng.num_pages} pages x {eng.page_size} tokens '
               f'+ shared-prefix radix cache')
+    if eng.attn_backend.name != 'reference':
+        print(f'attention backend: {eng.attn_backend.name} '
+              '(in-place paged/chunked kernel)')
     rng = np.random.default_rng(args.seed)
     sys_prompt = rng.integers(3, cfg.vocab_size, size=args.shared_prefix) \
         if args.shared_prefix else None

@@ -14,11 +14,14 @@ Paged mode (shared-prefix serving): :func:`make_paged_cache` replaces the
 per-slot ``(B, Sc, ...)`` cache with a global page pool
 ``(num_pages, page_size, ...)`` addressed through per-slot
 :class:`PageTables`; :func:`paged_update_chunk` scatters a chunk's K/V into
-the mapped pages and :func:`paged_view` gathers a slot-indexed virtual
-``(B, Sc, ...)`` cache back out, so the attend path (and therefore its
-rounding) is *exactly* the dense one — the bit-identity contract extends to
-paged serving. Policy (which pages a slot owns, prefix sharing, eviction)
-lives host-side in ``repro.serving.kvpool``.
+the mapped pages. How queries *read* that storage is delegated to a
+pluggable attention backend (``repro.models.attn_backend``): the reference
+backend gathers a slot-indexed virtual ``(B, Sc, ...)`` cache via
+:func:`paged_view` so the attend path (and therefore its rounding) is
+*exactly* the dense one — the bit-identity contract extends to paged
+serving — while the Pallas backend reads pages in place. Policy (which
+pages a slot owns, prefix sharing, eviction) lives host-side in
+``repro.serving.kvpool``.
 """
 from __future__ import annotations
 
@@ -33,6 +36,12 @@ from repro.models import layers as L
 from repro.models.layers import ParamSpec
 
 NEG_INF = -2.0 ** 30   # large-negative that survives bf16
+
+
+def _backend(backend):
+    """Resolve a backend arg (None/name/instance; None -> reference)."""
+    from repro.models.attn_backend import get_backend
+    return get_backend(backend)
 
 
 # ==================================================================== schema
@@ -530,21 +539,20 @@ def paged_update_chunk(cache: Dict, k_new: jax.Array, v_new: jax.Array,
     return paged_scatter(cache, upd, pos0, n_valid, table, Sc)
 
 
-def chunk_write_and_view(cache: Dict, k_h: jax.Array, v_h: jax.Array,
-                         pos0: jax.Array, n_valid: jax.Array, *,
-                         window: int, paged: Optional[PageTables]
-                         ) -> Tuple[Dict, Dict]:
-    """Chunk K/V write + the cache the queries should attend against:
-    (new stored cache, attend view). Dense mode: both are the updated
-    cache. Paged mode: the pool is scattered through the layer's table and
-    a dense-shaped virtual view is gathered back for the attend."""
+def chunk_write(cache: Dict, k_h: jax.Array, v_h: jax.Array,
+                pos0: jax.Array, n_valid: jax.Array, *,
+                window: int, paged: Optional[PageTables]) -> Dict:
+    """Chunk K/V write into the stored cache: the dense ring update, or a
+    scatter through the layer's page table in paged mode. How the queries
+    then *read* that storage is the attention backend's decision
+    (``repro.models.attn_backend``) — the reference backend gathers a
+    dense-shaped :func:`paged_view`, the Pallas backend reads pages in
+    place."""
     if paged is None:
-        cache = cache_update_chunk(cache, k_h, v_h, pos0, n_valid)
-        return cache, cache
+        return cache_update_chunk(cache, k_h, v_h, pos0, n_valid)
     ps = cache['k'].shape[1]
     table, Sc = paged.table_for(window, ps)
-    cache = paged_update_chunk(cache, k_h, v_h, pos0, n_valid, table, Sc)
-    return cache, paged_view(cache, table, Sc)
+    return paged_update_chunk(cache, k_h, v_h, pos0, n_valid, table, Sc)
 
 
 # ================================================================ decode core
@@ -564,10 +572,13 @@ def decode_attend(q: jax.Array, cache: Dict, pos: jax.Array, cfg: ModelConfig,
 
 def decode_step(params, x_normed: jax.Array, cache: Dict, pos: jax.Array,
                 cfg: ModelConfig, *, rope_theta, window: int = 0,
-                qkv: Optional[Tuple] = None) -> Tuple[jax.Array, Dict]:
+                qkv: Optional[Tuple] = None,
+                backend=None) -> Tuple[jax.Array, Dict]:
     """Full decode step: (qkv or projections) -> cache write -> attend -> wo.
 
     ``qkv`` supplies precomputed (q,k,v) rows for the paper's layer-0 path.
+    ``backend`` (an ``attn_backend.AttnBackend``; None = reference) decides
+    how the queries read the cache.
     """
     if qkv is None:
         q, k, v = compute_qkv(params, x_normed, cfg)
@@ -579,8 +590,9 @@ def decode_step(params, x_normed: jax.Array, cache: Dict, pos: jax.Array,
         k_h = L.apply_rope(k_h, pos[:, None], rope_theta)
     v_h = v.reshape(B, 1, cfg.num_kv_heads, cfg.head_dim)
     cache = cache_update(cache, k_h, v_h, pos)
-    ctx = decode_attend(q, cache, pos, cfg, rope_theta=rope_theta,
-                        window=window)
+    ctx = _backend(backend).attend_chunk(q, cache, pos, cfg,
+                                         rope_theta=rope_theta,
+                                         window=window)
     return L.dense(params['wo'], ctx), cache
 
 
@@ -630,7 +642,10 @@ def decode_attend_chunk(q: jax.Array, cache: Dict, pos0: jax.Array,
     dot for some head geometries (observed on CPU for MHA, where the group
     dim is 1), which would break the chunked == token-by-token bit-identity
     contract. The lanes still run inside one jit'd dispatch with one
-    whole-chunk cache write — the wins chunked prefill is about.
+    whole-chunk cache write — the wins chunked prefill is about. This is
+    the REFERENCE attention backend's attend; the pallas backend
+    (``attn_backend.PallasBackend``) batches all lanes in one kernel
+    dispatch at fp32 running-softmax (not bitwise) tolerance instead.
     """
     B, T = q.shape[0], q.shape[1]
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -652,14 +667,18 @@ def decode_chunk(params, x_normed: Optional[jax.Array], cache: Dict,
                  pos0: jax.Array, n_valid: jax.Array, cfg: ModelConfig, *,
                  rope_theta, window: int = 0, qkv: Optional[Tuple] = None,
                  rope_applied: bool = False,
-                 paged: Optional[PageTables] = None) -> Tuple[jax.Array, Dict]:
+                 paged: Optional[PageTables] = None,
+                 backend=None) -> Tuple[jax.Array, Dict]:
     """Chunked-prefill step: project (or take precomputed) a T-token chunk,
     write the valid prefix into the cache in one call, attend all T queries.
 
     ``qkv`` supplies gathered (q,k,v) rows (B,T,·) for the paper's layer-0
     path; ``rope_applied`` marks them as already rotated by the fused kernel.
-    ``paged`` switches the cache to the page-pool addressing mode (the
-    attend itself runs on a dense-shaped gathered view — same rounding).
+    ``paged`` switches the cache to the page-pool addressing mode.
+    ``backend`` (None = reference) decides how the queries read the stored
+    cache: the reference backend attends a dense(-gathered) view lane at a
+    time — the bit-identity contract — while the Pallas backend reads pages
+    in place with all T lanes batched in one dispatch.
     """
     if qkv is None:
         q, k, v = compute_qkv(params, x_normed, cfg)
@@ -672,12 +691,13 @@ def decode_chunk(params, x_normed: Optional[jax.Array], cache: Dict,
             + jnp.arange(T, dtype=jnp.int32)
         k_h = L.apply_rope(k_h, pos_t, rope_theta)
     v_h = v.reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
-    cache, attend_cache = chunk_write_and_view(cache, k_h, v_h, pos0,
-                                               n_valid, window=window,
-                                               paged=paged)
-    ctx = decode_attend_chunk(q, attend_cache, pos0, cfg,
-                              rope_theta=rope_theta, window=window,
-                              rope_applied=rope_applied)
+    cache = chunk_write(cache, k_h, v_h, pos0, n_valid, window=window,
+                        paged=paged)
+    ctx = _backend(backend).attend_chunk(q, cache, pos0, cfg,
+                                         rope_theta=rope_theta,
+                                         window=window,
+                                         rope_applied=rope_applied,
+                                         paged=paged)
     return L.dense(params['wo'], ctx), cache
 
 

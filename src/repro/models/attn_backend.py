@@ -1,0 +1,191 @@
+"""Pluggable attention backends for the decode / serving attend stack.
+
+Every decode-time attend — dense single-token, chunked prefill, paged
+serving, MLA latent, hybrid — routes through one of these backend objects:
+
+- :class:`ReferenceBackend` (``'reference'``, the default everywhere)
+  preserves the exact lane-at-a-time rounding of the historical code path:
+  query lanes attend one at a time so every lane issues contractions with
+  single-step shapes (the chunked == token-by-token bit-identity contract),
+  and paged caches are first gathered into a dense-shaped virtual view
+  (:func:`repro.models.attention.paged_view` survives only here). It is the
+  bit-identity oracle the differential test matrices pin.
+
+- :class:`PallasBackend` (``'pallas'``) runs the
+  :mod:`repro.kernels.paged_attention` kernel: KV pages are read **in
+  place** from the global pool through the per-slot page table (no dense
+  gather is ever materialised) and all T query lanes of a prefill chunk are
+  batched into one dispatch (no per-lane loop). Dense caches are viewed as
+  identity-table pages (a free reshape). Outputs match the reference within
+  fp32 running-softmax tolerance — not bitwise — so serving stacks that pin
+  bit-identity keep the default.
+
+Backends are stateless singletons; resolve one with :func:`get_backend`.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+class AttnBackend:
+    """Interface: produce attend context from the *stored* cache.
+
+    Cache writes (dense ring updates / paged scatters) are shared code and
+    happen before the backend is consulted; the backend only decides how the
+    queries read that storage. ``paged`` is an
+    ``attention.PageTables`` — when set, ``cache`` is the pool-shaped
+    ``(num_pages, page_size, ...)`` storage, otherwise the per-slot dense
+    ``(B, Sc, ...)`` cache.
+    """
+
+    name = 'abstract'
+
+    def attend_chunk(self, q: jax.Array, cache: Dict, pos0: jax.Array,
+                     cfg: ModelConfig, *, rope_theta, window: int = 0,
+                     rope_applied: bool = False, paged=None) -> jax.Array:
+        """q (B,T,q_size) flat (pre-RoPE unless ``rope_applied``); query lane
+        t sits at position ``pos0 + t``. -> (B,T,H*hd) context."""
+        raise NotImplementedError
+
+    def attend_mla(self, params, q_nope: jax.Array, q_pe: jax.Array,
+                   cache: Dict, pos0: jax.Array, cfg: ModelConfig, *,
+                   paged=None) -> jax.Array:
+        """Absorbed-form MLA latent attend. q_nope (B,T,H,dn) pre-absorb,
+        q_pe (B,T,H,dr) post-RoPE. -> (B,T,H,v_head_dim) context."""
+        raise NotImplementedError
+
+
+# =============================================================== reference
+class ReferenceBackend(AttnBackend):
+    """Lane-at-a-time attend over a dense(-shaped) cache — the bit-identity
+    oracle. Paged storage is gathered into a dense virtual view first, so
+    the contractions (and therefore the rounding) are exactly the dense
+    engine's."""
+
+    name = 'reference'
+
+    def _dense_view(self, cache: Dict, window: int, paged) -> Dict:
+        if paged is None:
+            return cache
+        from repro.models import attention as A
+        ps = next(iter(cache.values())).shape[1]
+        table, Sc = paged.table_for(window, ps)
+        return A.paged_view(cache, table, Sc)
+
+    def attend_chunk(self, q, cache, pos0, cfg, *, rope_theta, window=0,
+                     rope_applied=False, paged=None):
+        from repro.models import attention as A
+        cache = self._dense_view(cache, window, paged)
+        return A.decode_attend_chunk(q, cache, pos0, cfg,
+                                     rope_theta=rope_theta, window=window,
+                                     rope_applied=rope_applied)
+
+    def attend_mla(self, params, q_nope, q_pe, cache, pos0, cfg, *,
+                   paged=None):
+        from repro.models import mla as M
+        cache = self._dense_view(cache, 0, paged)   # MLA layers: append-only
+        T = q_nope.shape[1]
+        pos_t = pos0[:, None].astype(jnp.int32) \
+            + jnp.arange(T, dtype=jnp.int32)
+        return jnp.stack(
+            [M._mla_attend_lane(params, q_nope[:, t], q_pe[:, t], cache,
+                                pos_t[:, t], cfg) for t in range(T)], axis=1)
+
+
+# ================================================================== pallas
+def _interpret() -> bool:
+    from repro.kernels.ops import _interpret as ops_interpret
+    return ops_interpret()
+
+
+class PallasBackend(AttnBackend):
+    """In-place paged/chunked attention via the Pallas kernel.
+
+    Paged mode reads pool pages directly through the page table — the
+    dense per-layer gather of the reference path is gone. Dense caches are
+    reshaped (free) into identity-table pages, so one kernel serves both
+    storage modes; ``kernels.decode_attention`` is its T=1 case.
+    """
+
+    name = 'pallas'
+
+    @staticmethod
+    def _as_pages(cache: Dict, leaves, window: int, paged):
+        """-> (page-shaped leaves..., table). Paged storage passes through
+        untouched; dense storage is viewed as identity-table pages."""
+        from repro.kernels.paged_attention import (dense_as_pages,
+                                                   dense_identity_table,
+                                                   dense_page_split)
+        first = cache[leaves[0]]
+        if paged is not None:
+            table, _ = paged.table_for(window, first.shape[1])
+            return [cache.get(nm) for nm in leaves], table
+        B, Sc = first.shape[:2]
+        ps = dense_page_split(Sc)
+        pages = [dense_as_pages(cache[nm], ps) if nm in cache else None
+                 for nm in leaves]
+        return pages, dense_identity_table(B, Sc, ps)
+
+    def attend_chunk(self, q, cache, pos0, cfg, *, rope_theta, window=0,
+                     rope_applied=False, paged=None):
+        from repro.kernels.paged_attention import paged_attention
+        from repro.models import layers as L
+        B, T = q.shape[0], q.shape[1]
+        H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        q = q.reshape(B, T, H, hd)
+        if cfg.pos == 'rope' and not rope_applied:
+            pos_t = pos0[:, None].astype(jnp.int32) \
+                + jnp.arange(T, dtype=jnp.int32)
+            q = L.apply_rope(q, pos_t, rope_theta)
+        qg = q.reshape(B, T, KV, H // KV, hd)
+        (k, v, cp, ks, vs), table = self._as_pages(
+            cache, ('k', 'v', 'pos', 'k_scale', 'v_scale'), window, paged)
+        ctx = paged_attention(qg, k, v, cp, table, pos0.astype(jnp.int32),
+                              scale=hd ** -0.5, window=window,
+                              k_scale_pages=ks, v_scale_pages=vs,
+                              interpret=_interpret())
+        return ctx.reshape(B, T, H * hd)
+
+    def attend_mla(self, params, q_nope, q_pe, cache, pos0, cfg, *,
+                   paged=None):
+        from repro.kernels.paged_attention import paged_attention
+        m = cfg.mla
+        B, T, H = q_nope.shape[:3]
+        q_abs = jnp.einsum('bthd,rhd->bthr', q_nope.astype(jnp.float32),
+                           params['wuk'].astype(jnp.float32))
+        qcat = jnp.concatenate([q_abs, q_pe.astype(jnp.float32)],
+                               axis=-1)[:, :, None]     # (B,T,1,H,r+dr)
+        (ckv, kpe, cp), table = self._as_pages(
+            cache, ('ckv', 'kpe', 'pos'), 0, paged)
+        scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+        ctx_lat = paged_attention(
+            qcat, ckv[:, :, None], None, cp, table, pos0.astype(jnp.int32),
+            scale=scale, k2_pages=kpe[:, :, None], mla_split=m.kv_lora_rank,
+            interpret=_interpret())[:, :, 0]            # (B,T,H,r)
+        ctx_lat = ctx_lat.astype(cache['ckv'].dtype)
+        return jnp.einsum('bthr,rhd->bthd', ctx_lat,
+                          params['wuv'].astype(ctx_lat.dtype))
+
+
+# ============================================================== resolution
+REFERENCE = ReferenceBackend()
+PALLAS = PallasBackend()
+BACKENDS = {b.name: b for b in (REFERENCE, PALLAS)}
+
+
+def get_backend(backend: Optional['str | AttnBackend']) -> AttnBackend:
+    """None -> reference; a name -> the singleton; an instance passes."""
+    if backend is None:
+        return REFERENCE
+    if isinstance(backend, AttnBackend):
+        return backend
+    try:
+        return BACKENDS[backend]
+    except KeyError:
+        raise ValueError(f'unknown attention backend {backend!r}; '
+                         f'choose from {sorted(BACKENDS)}') from None

@@ -355,8 +355,8 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
                  n_valid: Optional[jax.Array] = None,
                  rope_applied: bool = False,
                  paged: Optional[A.PageTables] = None,
-                 lane_valid: Optional[jax.Array] = None
-                 ) -> Tuple[jax.Array, Dict, jax.Array]:
+                 lane_valid: Optional[jax.Array] = None,
+                 backend=None) -> Tuple[jax.Array, Dict, jax.Array]:
     """Decode step. h: (B,T,d); pos: (B,) start positions.
     -> (h_out, state, moe_dropped_token_slots).
 
@@ -373,7 +373,9 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
     ``paged`` switches the attention caches to page-pool addressing
     (chunked path only). ``lane_valid`` (B,) marks live slots in the
     one-token step so MoE routing can exclude free-slot lanes; the chunked
-    path derives its lane mask from ``n_valid``.
+    path derives its lane mask from ``n_valid``. ``backend`` (an
+    ``attn_backend.AttnBackend``; None = reference) picks the attend
+    implementation for every attention family, MLA and hybrid included.
     """
     theta = kind_theta(cfg, kind)
     window = kind_window(cfg, kind)
@@ -394,17 +396,20 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
             return A.decode_chunk(params['attn'], xn, state, pos, n_valid,
                                   cfg, rope_theta=theta, window=window,
                                   qkv=qkv, rope_applied=rope_applied,
-                                  paged=paged)
+                                  paged=paged, backend=backend)
         return A.decode_step(params['attn'], xn, state, pos, cfg,
-                             rope_theta=theta, window=window, qkv=qkv)
+                             rope_theta=theta, window=window, qkv=qkv,
+                             backend=backend)
 
     def attend_mla(xn, latents):
         if chunked:
             return M.mla_decode_chunk(params['attn'], xn, state, pos,
                                       n_valid, cfg, rope_theta=theta,
-                                      latents=latents, paged=paged)
+                                      latents=latents, paged=paged,
+                                      backend=backend)
         return M.mla_decode_step(params['attn'], xn, state, pos, cfg,
-                                 rope_theta=theta, latents=latents)
+                                 rope_theta=theta, latents=latents,
+                                 backend=backend)
 
     if kind in ATTN_KINDS:
         if cfg.block_type == 'parallel':
@@ -463,15 +468,15 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
             k_h = L.apply_rope(k_h, pos_t, theta)
         v_h = v.reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
         if chunked:
-            acache, attend_cache = A.chunk_write_and_view(
-                state['attn'], k_h, v_h, pos, n_valid, window=window,
+            acache = A.chunk_write(state['attn'], k_h, v_h, pos, n_valid,
+                                   window=window, paged=paged)
+            ctx = A._backend(backend).attend_chunk(
+                q, acache, pos, cfg, rope_theta=theta, window=window,
                 paged=paged)
-            ctx = A.decode_attend_chunk(q, attend_cache, pos, cfg,
-                                        rope_theta=theta, window=window)
         else:
             acache = A.cache_update(state['attn'], k_h, v_h, pos)
-            ctx = A.decode_attend(q, acache, pos, cfg, rope_theta=theta,
-                                  window=window)
+            ctx = A._backend(backend).attend_chunk(
+                q, acache, pos, cfg, rope_theta=theta, window=window)
         y_ssm, sstate = S.mamba_step(params['mamba'], xn, state['ssm'], cfg,
                                      pre=mpre, n_valid=n_valid)
         mix = 0.5 * (L.rmsnorm(ctx, params['norm_attn']['scale'])

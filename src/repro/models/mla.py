@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.models import layers as L
-from repro.models.attention import NEG_INF, paged_scatter, paged_view
+from repro.models.attention import NEG_INF, _backend, paged_scatter
 from repro.models.layers import ParamSpec
 
 
@@ -130,7 +130,8 @@ def mla_cache_abstract(cfg: ModelConfig, batch: int, seq_len: int, rules,
 
 def mla_decode_step(params, x_normed: jax.Array, cache: Dict, pos: jax.Array,
                     cfg: ModelConfig, *, rope_theta,
-                    latents: Optional[Tuple] = None) -> Tuple[jax.Array, Dict]:
+                    latents: Optional[Tuple] = None,
+                    backend=None) -> Tuple[jax.Array, Dict]:
     """Absorbed-form single-token MLA decode."""
     m = cfg.mla
     if latents is None:
@@ -151,9 +152,9 @@ def mla_decode_step(params, x_normed: jax.Array, cache: Dict, pos: jax.Array,
             k_pe_rot[:, 0].astype(cache['kpe'].dtype)),
         'pos': cache['pos'].at[bidx, idx].set(pos.astype(jnp.int32)),
     }
-    q_nope, q_pe = _split_q(q[:, 0], cfg)                 # (B,H,dn)/(B,H,dr)
-    q_pe = L.apply_rope(q_pe[:, None], pos[:, None], rope_theta)[:, 0]
-    ctx = _mla_attend_lane(params, q_nope, q_pe, cache, pos, cfg)
+    q_nope, q_pe = _split_q(q, cfg)                   # (B,1,H,dn)/(B,1,H,dr)
+    q_pe = L.apply_rope(q_pe, pos[:, None], rope_theta)
+    ctx = _backend(backend).attend_mla(params, q_nope, q_pe, cache, pos, cfg)
     return L.dense(params['wo'], ctx.reshape(B, 1, -1)), cache
 
 
@@ -215,7 +216,7 @@ def mla_cache_update_chunk(cache: Dict, c_kv: jax.Array, k_pe_rot: jax.Array,
 def mla_decode_chunk(params, x_normed: Optional[jax.Array], cache: Dict,
                      pos0: jax.Array, n_valid: jax.Array, cfg: ModelConfig, *,
                      rope_theta, latents: Optional[Tuple] = None,
-                     paged=None) -> Tuple[jax.Array, Dict]:
+                     paged=None, backend=None) -> Tuple[jax.Array, Dict]:
     """Absorbed-form chunked-prefill MLA: project (or take precomputed
     latents for) a whole (B,T) chunk, write the valid lanes' ``c_kv``/``k_pe``
     into the cache in one call, attend all T queries against it. Query lane
@@ -224,10 +225,11 @@ def mla_decode_chunk(params, x_normed: Optional[jax.Array], cache: Dict,
     the cache but masked). Padding lanes (``t >= n_valid``) compute garbage
     and never write.
 
-    Query lanes attend one at a time through :func:`_mla_attend_lane` (T is
-    the static serving chunk size) inside the one jit'd dispatch — same
-    reasoning as ``attention.decode_attend_chunk``: identical contraction
-    shapes are what make the bit-identity contract hold on every geometry.
+    The attend is the backend's (``repro.models.attn_backend``): the
+    reference backend walks query lanes one at a time through
+    :func:`_mla_attend_lane` so every lane issues single-step contraction
+    shapes — the bit-identity contract — while the Pallas backend batches
+    all T lanes and reads latent pages in place.
     """
     if latents is None:
         q, c_kv, k_pe = compute_latents(params, x_normed, cfg)
@@ -238,16 +240,13 @@ def mla_decode_chunk(params, x_normed: Optional[jax.Array], cache: Dict,
     k_pe_rot = L.apply_rope(k_pe[:, :, None, :], pos_t, rope_theta)[:, :, 0]
     if paged is None:
         cache = mla_cache_update_chunk(cache, c_kv, k_pe_rot, pos0, n_valid)
-        attend_cache = cache
     else:
         # MLA layers are full-causal (append-only): always the linear table
         table, Sc = paged.table_for(0, cache['ckv'].shape[1])
         cache = paged_scatter(cache, {'ckv': c_kv, 'kpe': k_pe_rot}, pos0,
                               n_valid, table, Sc)
-        attend_cache = paged_view(cache, table, Sc)
     q_nope, q_pe = _split_q(q, cfg)                   # (B,T,H,dn)/(B,T,H,dr)
     q_pe = L.apply_rope(q_pe, pos_t, rope_theta)
-    ctx = jnp.stack([_mla_attend_lane(params, q_nope[:, t], q_pe[:, t],
-                                      attend_cache, pos_t[:, t], cfg)
-                     for t in range(T)], axis=1)      # (B,T,H,dv)
+    ctx = _backend(backend).attend_mla(params, q_nope, q_pe, cache, pos0,
+                                       cfg, paged=paged)  # (B,T,H,dv)
     return L.dense(params['wo'], ctx.reshape(B, T, -1)), cache

@@ -81,7 +81,8 @@ class Model:
                     *, precomputed=None, rules=None, n_valid=None,
                     return_hidden: bool = False,
                     fused_gather_rope: bool = False, paged=None,
-                    lane_valid=None, return_stats: bool = False):
+                    lane_valid=None, return_stats: bool = False,
+                    attn_backend=None):
         """tokens (B,T), pos (B,) -> (logits (B,T,V), new states).
 
         T == 1 with ``n_valid=None`` is the classic decode step. Passing
@@ -91,11 +92,19 @@ class Model:
         ``paged`` (an ``attention.PageTables``) addresses the attention
         caches through the serving engine's page pool; ``return_stats``
         appends a stats dict (MoE token drops) to the return tuple.
+        ``attn_backend`` (name or ``attn_backend.AttnBackend``; None =
+        reference) picks the attend implementation for every attention
+        layer — 'pallas' reads paged KV in place and batches chunk lanes.
         """
         c = self.cfg
+        from repro.models.attn_backend import get_backend
+        attn_backend = get_backend(attn_backend)
         if c.arch_class == 'audio':
             assert n_valid is None and paged is None, \
                 'audio decode is one token per step, dense cache only'
+            if attn_backend.name != 'reference':
+                raise ValueError('audio enc-dec decode supports only the '
+                                 'reference attention backend')
             logits, states = E.encdec_decode_step(params, tokens, states,
                                                   pos, c,
                                                   precomputed=precomputed)
@@ -108,7 +117,8 @@ class Model:
                                 n_valid=n_valid, return_hidden=return_hidden,
                                 fused_gather_rope=fused_gather_rope,
                                 paged=paged, lane_valid=lane_valid,
-                                return_stats=return_stats)
+                                return_stats=return_stats,
+                                attn_backend=attn_backend)
 
     # ------------------------------------------------------------- states
     def make_states(self, batch: int, seq_len: int, dtype=jnp.bfloat16,

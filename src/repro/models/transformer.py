@@ -335,7 +335,8 @@ def backbone_decode(params, h: jax.Array, states: Dict, pos: jax.Array,
                     cfg: ModelConfig, *, pre0: Optional[Dict] = None,
                     rules=None, n_valid: Optional[jax.Array] = None,
                     rope_applied: bool = False, paged=None,
-                    lane_valid: Optional[jax.Array] = None
+                    lane_valid: Optional[jax.Array] = None,
+                    attn_backend=None
                     ) -> Tuple[jax.Array, Dict, jax.Array]:
     """``n_valid is None``: classic one-token step (h is (B,1,d)).
     With ``n_valid`` (B,): chunked step — h is (B,T,d); attention layers
@@ -343,10 +344,13 @@ def backbone_decode(params, h: jax.Array, states: Dict, pos: jax.Array,
     layers scan the chunk with masked state commits. Every kind supports it.
     ``paged`` (a PageTables) switches attention caches to page-pool
     addressing; ``lane_valid`` masks dead slots out of MoE routing in the
-    one-token step. Returns (h, states, moe_dropped_token_slots).
+    one-token step; ``attn_backend`` (an ``attn_backend.AttnBackend``;
+    None = reference) picks the attend implementation for every attention
+    layer in the stack. Returns (h, states, moe_dropped_token_slots).
     """
     plan = layer_plan(cfg)
-    kw = dict(n_valid=n_valid, paged=paged, lane_valid=lane_valid)
+    kw = dict(n_valid=n_valid, paged=paged, lane_valid=lane_valid,
+              backend=attn_backend)
     drops = jnp.zeros((), jnp.int32)
     new_states: Dict[str, Any] = {}
     h, st, d0 = block_decode(params['layer0'], h, states['layer0'], pos, cfg,
@@ -413,7 +417,8 @@ def lm_decode_step(params, tokens: jax.Array, states: Dict, pos: jax.Array,
                    return_hidden: bool = False,
                    fused_gather_rope: bool = False, paged=None,
                    lane_valid: Optional[jax.Array] = None,
-                   return_stats: bool = False) -> Tuple[jax.Array, Dict]:
+                   return_stats: bool = False,
+                   attn_backend=None) -> Tuple[jax.Array, Dict]:
     """tokens (B,T), pos (B,) -> (logits (B,T,V), new states).
 
     ``n_valid is None`` is the classic one-token step (T == 1). With
@@ -437,6 +442,8 @@ def lm_decode_step(params, tokens: jax.Array, states: Dict, pos: jax.Array,
     page-pool addressing — shared-prefix serving. ``lane_valid`` (B,) masks
     dead slots out of MoE routing in the one-token step. ``return_stats``
     appends a stats dict (``moe_drops``) to the return tuple.
+    ``attn_backend`` selects the attend implementation (see
+    ``repro.models.attn_backend``; None = the bit-identical reference).
     """
     rope_applied = False
     if n_valid is None:
@@ -466,7 +473,8 @@ def lm_decode_step(params, tokens: jax.Array, states: Dict, pos: jax.Array,
                                        cfg, pre0=pre0, rules=rules,
                                        n_valid=n_valid,
                                        rope_applied=rope_applied,
-                                       paged=paged, lane_valid=lane_valid)
+                                       paged=paged, lane_valid=lane_valid,
+                                       attn_backend=attn_backend)
     out = h if return_hidden else lm_logits(params, h, cfg)
     if return_stats:
         return out, states, {'moe_drops': drops}

@@ -27,8 +27,19 @@ through per-slot page tables, and admission looks the prompt up in a
 token-prefix radix index (``repro.serving.kvpool``). A request whose
 prompt shares a cached prefix attaches the prefix's pages read-only and
 skips that part of its chunked prefill entirely — the shared-system-prompt
-TTFT win. Decode attends over a gathered dense-shaped *view* of the
-slot's pages, so token outputs stay bit-identical to the dense engine.
+TTFT win. With the default ``attn_backend='reference'`` decode attends
+over a gathered dense-shaped *view* of the slot's pages, so token outputs
+stay bit-identical to the dense engine.
+
+**Attention backend** (``attn_backend='reference' | 'pallas'``): every
+attend in the stack routes through ``repro.models.attn_backend``. The
+reference backend is the bit-identity oracle (lane-at-a-time rounding,
+dense-gathered paged views). The Pallas backend runs
+``kernels/paged_attention.py``: KV pages are read **in place** through the
+page table (the per-layer dense gather disappears) and all chunk query
+lanes are batched into one kernel dispatch — outputs match the reference
+within fp32 running-softmax tolerance, not bitwise (compiled on TPU;
+interpret mode elsewhere, for validation only).
 Sliding-window layers get private ring pages; architectures with ring or
 recurrent state additionally store a per-boundary state *snapshot* on the
 radix node and restore it on a hit. A request that stops short inside a
@@ -103,15 +114,21 @@ class ServingEngine:
                  dtype=jnp.float32, kv_quant: bool = False,
                  chunk_size: int = 1, fused_gather_rope: bool = False,
                  prefix_cache: bool = False, page_size: int = 16,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None,
+                 attn_backend: str = 'reference'):
+        from repro.models.attn_backend import get_backend
         self.model, self.params = model, params
         self.max_slots, self.max_seq = max_slots, max_seq
         self.precomputed = precomputed
+        self.attn_backend = get_backend(attn_backend)
         if model.cfg.arch_class == 'audio':
             chunk_size = 1   # enc-dec decode is one token per step by API
             if prefix_cache:
                 raise ValueError('paged prefix caching is not supported for '
                                  'audio enc-dec decode')
+            if self.attn_backend.name != 'reference':
+                raise ValueError('audio enc-dec decode supports only the '
+                                 'reference attention backend')
         from repro.models.blocks import ATTN_KINDS, kind_window
         from repro.models.transformer import layer_plan
         plan = layer_plan(model.cfg)
@@ -227,6 +244,7 @@ class ServingEngine:
     def _build_programs(self) -> None:
         model, precomputed = self.model, self.precomputed
         sc_ring = self._sc_ring
+        backend = self.attn_backend
 
         def paged_tables(pt, rt):
             if pt is None:
@@ -236,7 +254,8 @@ class ServingEngine:
         def step(params, states, tokens, pos, key, temps, lane_valid):
             logits, states, stats = model.decode_step(
                 params, tokens, states, pos, precomputed=precomputed,
-                lane_valid=lane_valid, return_stats=True)
+                lane_valid=lane_valid, return_stats=True,
+                attn_backend=backend)
             nxt = sample_tokens(logits[:, 0], key, temps)
             return states, nxt, stats['moe_drops']
 
@@ -245,7 +264,8 @@ class ServingEngine:
         def step_logits(params, states, tokens, pos, key, temps, lane_valid):
             logits, states, stats = model.decode_step(
                 params, tokens, states, pos, precomputed=precomputed,
-                lane_valid=lane_valid, return_stats=True)
+                lane_valid=lane_valid, return_stats=True,
+                attn_backend=backend)
             nxt = sample_tokens(logits[:, 0], key, temps)
             return states, nxt, stats['moe_drops'], logits          # (B,1,V)
 
@@ -257,7 +277,8 @@ class ServingEngine:
                 params, tokens, states, pos, precomputed=precomputed,
                 n_valid=n_valid, return_hidden=True,
                 fused_gather_rope=self.fused_gather_rope,
-                paged=paged_tables(pt, rt), return_stats=True)
+                paged=paged_tables(pt, rt), return_stats=True,
+                attn_backend=backend)
             # head only on each slot's last valid lane, not all T lanes
             idx = jnp.maximum(n_valid - 1, 0)[:, None, None]
             h_last = jnp.take_along_axis(h, idx, axis=1)          # (B,1,d)

@@ -1,0 +1,260 @@
+"""Unified attention-backend layer: pallas-vs-reference parity matrix.
+
+The reference backend is the bit-identity oracle (lane-at-a-time rounding,
+dense-gathered paged views — pinned by test_chunked_all_archs.py and
+test_paged_prefix.py, which run it by default). The Pallas backend
+(kernels/paged_attention.py, interpret mode on CPU) must match it within
+fp32 running-softmax tolerance across the whole matrix: page sizes {8, 16},
+unaligned final pages, ring wraparound, sliding-window layers, GQA
+fp32/int8, and MLA — at kernel, model-step and engine level. Plus a
+hypothesis property: attention is invariant under any permutation of the
+physical page pool (with the page tables remapped to match).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.config import MLAConfig, ModelConfig, MoEConfig
+from repro.kernels import ref
+from repro.kernels.paged_attention import paged_attention
+from repro.models.attn_backend import (BACKENDS, PALLAS, REFERENCE,
+                                       get_backend)
+from repro.models.model import Model
+from repro.serving import Request, ServingEngine
+
+TOL = dict(atol=2e-4, rtol=2e-4)        # fp32 running-softmax vs full-softmax
+
+
+# ========================================================== kernel vs oracle
+def _pool(seed, NP, ps, KV, d, quant=False):
+    kk = jax.random.PRNGKey(seed)
+    mk = lambda i, shape: jax.random.normal(jax.random.fold_in(kk, i), shape)
+    if quant:
+        k = jax.random.randint(jax.random.fold_in(kk, 0), (NP, ps, KV, d),
+                               -127, 127).astype(jnp.int8)
+        v = jax.random.randint(jax.random.fold_in(kk, 1), (NP, ps, KV, d),
+                               -127, 127).astype(jnp.int8)
+        ks = jnp.abs(mk(2, (NP, ps, KV))) * 0.05 + 1e-3
+        vs = jnp.abs(mk(3, (NP, ps, KV))) * 0.05 + 1e-3
+        return k, v, ks.astype(jnp.bfloat16), vs.astype(jnp.bfloat16)
+    return mk(0, (NP, ps, KV, d)), mk(1, (NP, ps, KV, d)), None, None
+
+
+def _fill_positions(NP, ps, table, lengths, Sc):
+    """Stored positions for each slot's pages: slot b holds positions
+    [0, lengths[b]) at virtual index pos % Sc — ring layers wrap, linear
+    layers have Sc >= length. Unallocated entries stay -1 (null page 0)."""
+    cpos = np.full((NP, ps), -1, np.int32)
+    B, P = table.shape
+    for b in range(B):
+        n = int(lengths[b])
+        for pos in range(max(0, n - Sc), n):      # live ring window
+            idx = pos % Sc
+            pg = int(table[b, idx // ps])
+            if pg:
+                cpos[pg, idx % ps] = pos
+    return jnp.asarray(cpos)
+
+
+@pytest.mark.parametrize('ps', [8, 16])
+@pytest.mark.parametrize('window', [0, 5])
+@pytest.mark.parametrize('quant', [False, True])
+@pytest.mark.parametrize('T', [1, 5])
+def test_kernel_matches_gather_oracle(ps, window, quant, T):
+    """In-place page reads == gather-then-attend, including null-page table
+    entries, an unaligned final page and ring wraparound (Sc=11 < length)."""
+    B, KV, G, d = 2, 2, 2, 16
+    Sc = 11 if window else 24             # ring: not a page multiple
+    P = -(-Sc // ps)
+    NP = 1 + B * P
+    table = np.zeros((B, P), np.int32)
+    nxt = 1
+    for b in range(B):
+        for j in range(P):
+            table[b, j] = nxt
+            nxt += 1
+    table[1, -1] = 0                      # slot 1: trailing null-page entry
+    lengths = [Sc + 7, ps - 3]            # wraps ring / ends mid-first-page
+    k, v, ks, vs = _pool(0, NP, ps, KV, d, quant)
+    cpos = _fill_positions(NP, ps, table, lengths, Sc)
+    q = jax.random.normal(jax.random.PRNGKey(9), (B, T, KV, G, d))
+    pos0 = jnp.asarray([le - 1 for le in lengths], jnp.int32)
+    args = (q, k, v, cpos, jnp.asarray(table), pos0)
+    kw = dict(scale=d ** -0.5, window=window, k_scale_pages=ks,
+              v_scale_pages=vs)
+    got = paged_attention(*args, **kw, interpret=True)
+    want = ref.paged_attention_ref(*args, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@pytest.mark.parametrize('ps', [8, 16])
+def test_kernel_mla_matches_gather_oracle(ps):
+    B, H, r, dr = 2, 3, 12, 6
+    Sc, T = 24, 4
+    P = -(-Sc // ps)
+    NP = 1 + B * P
+    table = np.arange(B * P).reshape(B, P).astype(np.int32) + 1
+    lengths = [Sc - 2, 5]
+    kk = jax.random.PRNGKey(3)
+    ckv = jax.random.normal(kk, (NP, ps, 1, r))
+    kpe = jax.random.normal(jax.random.fold_in(kk, 1), (NP, ps, 1, dr))
+    cpos = _fill_positions(NP, ps, table, lengths, Sc)
+    q = jax.random.normal(jax.random.fold_in(kk, 2), (B, T, 1, H, r + dr))
+    pos0 = jnp.asarray([le - 1 for le in lengths], jnp.int32)
+    kw = dict(scale=(r + dr) ** -0.5, k2_pages=kpe, mla_split=r)
+    got = paged_attention(q, ckv, None, cpos, jnp.asarray(table), pos0,
+                          **kw, interpret=True)
+    want = ref.paged_attention_ref(q, ckv, None, cpos, jnp.asarray(table),
+                                   pos0, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+# ================================================== model-step parity (dense)
+def _cfg(kind):
+    base = dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                head_dim=16, d_ff=128, vocab_size=211, max_seq_len=256,
+                dtype='float32')
+    if kind == 'gqa':
+        return ModelConfig(name='ab-gqa', arch_class='dense', **base)
+    if kind == 'local':
+        return ModelConfig(name='ab-local', arch_class='dense',
+                           pattern=('global', 'local'), window=8, **base)
+    if kind == 'mla':
+        return ModelConfig(
+            name='ab-mla', arch_class='moe', num_layers=2, d_model=64,
+            num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128,
+            vocab_size=211, max_seq_len=256, dtype='float32',
+            tie_embeddings=False,
+            mla=MLAConfig(kv_lora_rank=16, q_lora_rank=0, qk_nope_dim=16,
+                          qk_rope_dim=8, v_head_dim=16),
+            moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=32,
+                          num_shared=1, first_dense_layers=1,
+                          capacity_factor=2.0))
+    raise ValueError(kind)
+
+
+def _build(kind):
+    cfg = _cfg(kind)
+    model = Model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize('kind', ['gqa', 'local', 'mla'])
+@pytest.mark.parametrize('quant', [False, True])
+def test_model_chunked_decode_parity_dense(kind, quant):
+    """Whole-prompt chunked decode over dense caches: pallas logits match
+    the reference backend at every position (incl. ring wraparound for the
+    sliding-window layer: prompt 20 > ring 8 + slack)."""
+    if quant and kind == 'mla':
+        pytest.skip('MLA latent cache is not int8-quantised')
+    cfg, model, params = _build(kind)
+    B, P, T = 2, 20, 4
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, P), 3, 200)
+    outs = {}
+    for backend in ('reference', 'pallas'):
+        states = model.make_states(B, 32, jnp.float32, kv_quant=quant,
+                                   chunk=T)
+        logits, p = [], 0
+        while p < P:
+            n = min(T, P - p)
+            block = jnp.zeros((B, T), jnp.int32).at[:, :n].set(
+                toks[:, p:p + n])
+            lg, states = model.decode_step(
+                params, block, states, jnp.full((B,), p, jnp.int32),
+                n_valid=jnp.full((B,), n, jnp.int32), attn_backend=backend)
+            logits.append(lg[:, :n])
+            p += n
+        outs[backend] = np.asarray(jnp.concatenate(logits, 1))
+    np.testing.assert_allclose(outs['pallas'], outs['reference'], **TOL)
+
+
+# ============================================================= engine parity
+@pytest.mark.parametrize('kind,quant,ps', [
+    ('gqa', False, 8), ('gqa', True, 16), ('local', False, 8),
+    ('mla', False, 16),
+])
+def test_engine_paged_pallas_matches_reference(kind, quant, ps):
+    """Paged serving with the pallas backend: greedy tokens equal the
+    reference engine's across cold prefill AND prefix-cache hits (second
+    wave), with no dense per-layer gather on the attend path."""
+    cfg, model, params = _build(kind)
+    prefix = np.random.default_rng(99).integers(3, 200, size=20)
+
+    def run(backend):
+        eng = ServingEngine(model, params, max_slots=2, max_seq=64,
+                            chunk_size=4, kv_quant=quant, prefix_cache=True,
+                            page_size=ps, attn_backend=backend)
+        waves = []
+        for seeds in ([7, 8, 9], [50, 51]):         # wave 2 hits the radix
+            reqs = [Request(uid=s, prompt=np.concatenate([
+                prefix, np.random.default_rng(s).integers(3, 200, size=4)]),
+                max_new_tokens=5) for s in seeds]
+            for r in reqs:
+                eng.submit(r)
+            eng.run()
+            waves += reqs
+        assert eng.stats(waves)['prefix_hits'] >= 2
+        return [r.generated for r in waves]
+
+    assert run('pallas') == run('reference')
+
+
+def test_engine_pallas_score_logits_close():
+    """Prompt-scoring logits through the pallas backend stay within fp32
+    tolerance of the reference engine's at every position."""
+    cfg, model, params = _build('gqa')
+    prompt = np.random.default_rng(5).integers(3, 200, size=10)
+    want = ServingEngine(model, params, max_slots=2, max_seq=64,
+                         chunk_size=4).score([prompt])[0]
+    got = ServingEngine(model, params, max_slots=2, max_seq=64, chunk_size=4,
+                        attn_backend='pallas').score([prompt])[0]
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+# ===================================================== page-table permutation
+@settings(max_examples=15, deadline=None)
+@given(ps=st.sampled_from([4, 8]), seed=st.integers(0, 2 ** 16),
+       window=st.sampled_from([0, 6]), data=st.data())
+def test_page_table_permutation_invariance(ps, seed, window, data):
+    """Attention output is BITWISE invariant under any permutation of the
+    physical page pool when the tables are remapped to match — physical
+    page identity carries no information (the allocator may hand out any
+    free page)."""
+    B, KV, G, d, T = 2, 2, 1, 8, 3
+    Sc = 16
+    P = Sc // ps
+    NP = 1 + B * P + 2                    # a couple of free pages too
+    table = np.arange(B * P).reshape(B, P).astype(np.int32) + 1
+    lengths = [Sc + 3 if window else Sc - 2, 5]
+    k, v, _, _ = _pool(seed, NP, ps, KV, d)
+    cpos = _fill_positions(NP, ps, table, lengths, Sc)
+    q = jax.random.normal(jax.random.PRNGKey(seed + 1), (B, T, KV, G, d))
+    pos0 = jnp.asarray([le - 1 for le in lengths], jnp.int32)
+    kw = dict(scale=d ** -0.5, window=window, interpret=True)
+    base = paged_attention(q, k, v, cpos, jnp.asarray(table), pos0, **kw)
+
+    # permute physical pages 1..NP-1 (page 0 stays the null page)
+    perm = np.asarray(
+        data.draw(st.permutations(list(range(1, NP))), label='perm'))
+    perm = np.concatenate([[0], perm])
+    inv = np.argsort(perm)                # new position of old page i
+    k2 = jnp.asarray(np.asarray(k)[perm])
+    v2 = jnp.asarray(np.asarray(v)[perm])
+    cpos2 = jnp.asarray(np.asarray(cpos)[perm])
+    table2 = jnp.asarray(inv[table].astype(np.int32))
+    got = paged_attention(q, k2, v2, cpos2, table2, pos0, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+# ================================================================ resolution
+def test_get_backend_resolution():
+    assert get_backend(None) is REFERENCE
+    assert get_backend('reference') is REFERENCE
+    assert get_backend('pallas') is PALLAS
+    assert get_backend(PALLAS) is PALLAS
+    assert set(BACKENDS) == {'reference', 'pallas'}
+    with pytest.raises(ValueError):
+        get_backend('nope')
