@@ -15,6 +15,11 @@ Three workloads:
   TTFT comparison on a hybrid attention∥mamba stack and an MLA stack —
   the chunk paths that are NOT plain dense GQA, so regressions in the
   masked-state scan or the latent chunk write show up in the trajectory.
+- **overload** (fault-tolerance acceptance gate): KV demand oversubscribes
+  the page pool and the mix includes malformed and mid-run-cancelled
+  requests — the engine must finish 100% of valid requests via preemption,
+  bit-identical to an unfaulted dense run, isolating every failure to its
+  own request.
 
 Each workload merges its section into ``BENCH_serving.json`` (repo root)
 so the perf trajectory is machine-readable across PRs:
@@ -33,7 +38,8 @@ import numpy as np
 
 from repro.config import MLAConfig, ModelConfig, SSMConfig
 from repro.models.model import Model
-from repro.serving import Request, ServingEngine
+from repro.serving import Request, ScriptedFaults, ServingEngine
+from repro.serving.engine import RequestStatus
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), 'BENCH_serving.json')
@@ -302,12 +308,112 @@ def bench_recurrent_mla(prompt_len: int = 96, new_tokens: int = 4,
     return rows
 
 
+def bench_overload(n_req: int = 8, prompt_len: int = 40,
+                   new_tokens: int = 16, chunk_size: int = 8,
+                   page_size: int = 16, num_pages: int = 12,
+                   n_layers: int = 4, write_json: bool = True
+                   ) -> List[Tuple[str, float, str]]:
+    """Overload + fault workload: aggregate KV demand exceeds the page
+    pool, the request mix includes malformed and mid-run-cancelled
+    requests, and the engine must still finish **100% of valid requests**
+    via preemption — with every preempted request's tokens bit-identical
+    to an uninterrupted dense-engine run. Doubles as the acceptance gate
+    for the fault-tolerance contract (any assertion here fails CI)."""
+    model, params = _bench_model(n_layers)
+    max_seq = 128
+    max_slots = 4
+    # in-flight demand: max_slots * ceil((P+G)/page_size) pages ≫ num_pages
+    demand = max_slots * -(-(prompt_len + 2 + new_tokens) // page_size)
+    assert demand > num_pages, 'overload workload must oversubscribe pool'
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(3, 2000, size=prompt_len + (i % 5) - 2)
+               for i in range(n_req)]
+
+    def mkreqs():
+        return [Request(uid=i, prompt=prompts[i], max_new_tokens=new_tokens)
+                for i in range(n_req)]
+
+    # dense engine, no faults: the bit-identity oracle
+    ref_eng = ServingEngine(model, params, max_slots=max_slots,
+                            max_seq=max_seq, chunk_size=chunk_size)
+    ref = mkreqs()
+    for r in ref:
+        ref_eng.submit(r)
+    ref_eng.run()
+
+    cancelled_uids = {n_req - 2, n_req - 1}
+    faults = ScriptedFaults(cancel_uids={12: sorted(cancelled_uids)})
+    eng = ServingEngine(model, params, max_slots=max_slots, max_seq=max_seq,
+                        chunk_size=chunk_size, prefix_cache=True,
+                        page_size=page_size, num_pages=num_pages,
+                        fault_injector=faults)
+    reqs = mkreqs()
+    invalid = [
+        Request(uid=100, prompt=np.array([], np.int64),
+                max_new_tokens=new_tokens),
+        Request(uid=101, prompt=rng.integers(3, 2000, size=max_seq),
+                max_new_tokens=new_tokens),
+        Request(uid=102, prompt=prompts[0], max_new_tokens=0),
+    ]
+    t0 = time.perf_counter()
+    for r in reqs + invalid:
+        eng.submit(r)
+    run_report = eng.run(max_iters=50_000)
+    total_s = time.perf_counter() - t0
+
+    valid = [r for r in reqs if r.uid not in cancelled_uids]
+    dropped = [r for r in reqs if r.uid in cancelled_uids]
+    for r, want in zip(valid, ref):
+        assert r.status is RequestStatus.FINISHED, \
+            f'valid uid={r.uid} ended {r.status} ({r.error})'
+        assert r.generated == want.generated, \
+            f'uid={r.uid}: tokens diverged across preemption'
+    assert all(r.status is RequestStatus.FAILED for r in invalid)
+    assert all(r.status is RequestStatus.CANCELLED for r in dropped)
+    assert run_report['preemptions'] >= 1, \
+        'overload run did not exercise preemption'
+    assert run_report['stalled'] == 0 and run_report['in_flight'] == 0
+
+    completion_rate = sum(r.done for r in valid) / len(valid)
+    lat = sorted(r.finish_t - r.submit_t for r in valid)
+    p99 = float(np.percentile(lat, 99))
+    stats = eng.stats(reqs)
+    if write_json:
+        _merge_json('robustness', {
+            'workload': {'n_req': n_req, 'invalid': len(invalid),
+                         'cancelled': len(dropped),
+                         'prompt_len': prompt_len,
+                         'new_tokens': new_tokens,
+                         'chunk_size': chunk_size, 'page_size': page_size,
+                         'num_pages': num_pages,
+                         'demand_pages': demand,
+                         'model': f'{n_layers}L d=256 fp32 CPU'},
+            'completion_rate_valid': completion_rate,
+            'preemptions': run_report['preemptions'],
+            'preempted_requests': sum(r.preemptions > 0 for r in reqs),
+            'failed': stats['failed'],
+            'cancelled': stats['cancelled'],
+            'deadline_exceeded': stats['deadline_exceeded'],
+            'p99_latency_s': p99,
+            'total_s': total_s,
+            'engine_steps': eng.steps,
+            'bit_identical_to_dense': True,   # asserted above
+        })
+    return [
+        ('serving/overload_completion_rate', completion_rate,
+         f"{len(valid)} valid reqs, pool {num_pages} pages vs "
+         f"demand {demand}, {run_report['preemptions']} preemptions"),
+        ('serving/overload_p99_latency_s', p99,
+         f'{len(invalid)} invalid + {len(dropped)} cancelled isolated'),
+    ]
+
+
 if __name__ == '__main__':
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument('--workload', default='prompt-heavy',
                     choices=['prompt-heavy', 'shared-prefix',
-                             'recurrent-mla'])
+                             'recurrent-mla', 'overload'])
     ap.add_argument('--smoke', action='store_true',
                     help='small CI workload: 2 layers, short prompts — '
                          'tracks the TTFT trajectory across PRs without '
@@ -328,6 +434,13 @@ if __name__ == '__main__':
                                        repeats=2)
         else:
             rows = bench_recurrent_mla()
+    elif args.workload == 'overload':
+        if args.smoke:
+            rows = bench_overload(n_req=6, prompt_len=24, new_tokens=8,
+                                  chunk_size=8, page_size=8, num_pages=10,
+                                  n_layers=2)
+        else:
+            rows = bench_overload()
     elif args.smoke:
         rows = bench_serving_prompt_heavy(prompt_len=48, new_tokens=2,
                                           chunk_size=16, n_req=3,

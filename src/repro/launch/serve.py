@@ -7,6 +7,17 @@ engine, with the paper's precomputed first layer ON by default.
     # paged serving with the in-place Pallas attention kernel
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b \
         --prefix-cache --shared-prefix 64 --attn-backend pallas
+
+Failure semantics: every failure is a per-request outcome, never an engine
+crash. Requests move through QUEUED -> PREFILLING -> DECODING -> FINISHED,
+with FAILED / CANCELLED / PREEMPTED branches: malformed submissions fail at
+submit time with ``error`` set; KV-pool exhaustion preempts a victim slot
+(fewest decoded tokens, LIFO tie-break, oldest in flight protected) whose
+finished pages are published to the prefix cache so its resume recomputes
+only the uncached tail — tokens across preempt/resume stay bit-identical
+to an uninterrupted run; ``--deadline`` bounds each request's wall clock;
+non-finite logits fail only the offending lane. ``run()`` reports
+preemptions / failed / cancelled / deadline_exceeded, printed below.
 """
 from __future__ import annotations
 
@@ -68,6 +79,11 @@ def main() -> None:
                          'query lanes are batched into one dispatch '
                          '(compiled on TPU, interpret mode on CPU; outputs '
                          'match reference to fp32 tolerance, not bitwise)')
+    ap.add_argument('--deadline', type=float, default=0.0,
+                    help='per-request wall-clock budget in seconds, '
+                         'enforced every engine step; an expired request '
+                         'is FAILED("deadline_exceeded") and its slot '
+                         'freed, the rest keep serving (0 = no deadline)')
     ap.add_argument('--seed', type=int, default=0)
     args = ap.parse_args()
 
@@ -126,12 +142,13 @@ def main() -> None:
 
     reqs = [Request(uid=i, prompt=mkprompt(),
                     max_new_tokens=args.new_tokens,
-                    temperature=args.temperature)
+                    temperature=args.temperature,
+                    deadline_s=args.deadline or None)
             for i in range(args.requests)]
     t0 = time.time()
     for r in reqs:
         eng.submit(r)
-    eng.run()
+    report = eng.run()
     dt = time.time() - t0
     stats = eng.stats(reqs)
     total_toks = stats['tokens']
@@ -142,6 +159,10 @@ def main() -> None:
           f'mean TTFT {stats["mean_ttft_s"]:.3f}s, '
           f'engine steps {stats["engine_steps"]}, '
           f'MoE token drops {stats["moe_token_drops"]}')
+    print(f'fault tolerance: {stats["preemptions"]} preemptions, '
+          f'{stats["failed"]} failed, {stats["cancelled"]} cancelled, '
+          f'{stats["deadline_exceeded"]} deadline-exceeded, '
+          f'{report["stalled"]} stalled')
     if eng.paged:
         print(f'prefix cache: hit rate {stats["prefix_hit_rate"]:.2f} '
               f'({stats["prefix_hits"]} hits / {stats["prefix_misses"]} '

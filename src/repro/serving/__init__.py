@@ -1,5 +1,7 @@
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import Request, RequestStatus, ServingEngine
+from repro.serving.faults import FaultInjector, ScriptedFaults
 from repro.serving.kvpool import PrefixCache
 from repro.serving.sampler import sample_tokens
 
-__all__ = ['Request', 'ServingEngine', 'PrefixCache', 'sample_tokens']
+__all__ = ['Request', 'RequestStatus', 'ServingEngine', 'PrefixCache',
+           'FaultInjector', 'ScriptedFaults', 'sample_tokens']

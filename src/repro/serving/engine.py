@@ -62,10 +62,49 @@ chunk. ``fused_gather_rope=True`` additionally folds layer-0 RoPE into that
 gather via the Pallas kernel (``kernels/gather_rope.py``), so rows go
 gather→RoPE→attention without an HBM round-trip (compiled TPU path; on CPU
 the kernel runs in interpret mode and is for validation only).
+
+**Failure semantics** (fault-tolerant serving): every request carries a
+``RequestStatus`` lifecycle (``QUEUED → PREFILLING → DECODING → FINISHED``,
+with ``FAILED / CANCELLED / PREEMPTED`` branches) and every failure mode is
+a *per-request outcome* — the engine itself never dies on load:
+
+- **Validation at submit**: empty prompts, prompts that cannot fit
+  ``max_seq``, and non-positive ``max_new_tokens`` are marked
+  ``FAILED`` immediately (``error`` says why); the engine keeps stepping.
+  Duplicate *live* uids are rejected with ``ValueError``.
+- **Preemption instead of pool-exhaustion crashes**: when the paged KV
+  pool runs dry (and eviction finds nothing cold), the engine preempts a
+  victim slot — fewest decoded tokens, LIFO on ties; the oldest in-flight
+  request is protected so some request always runs to completion (no
+  mutual-preemption livelock, which would otherwise be fatal for
+  ring/recurrent archs whose mid-page progress can't be published) —
+  publishes the victim's fully-written pages into the radix prefix index,
+  releases its pages, and requeues it. Resume is a prefix hit: only the
+  uncached tail recomputes, and greedy tokens across preempt/resume are
+  **bitwise identical** to an uninterrupted run (the chunked-prefill
+  identity contract extended to the failure path). A request that cannot
+  be scheduled even after bounded retries and preemption fails with
+  ``error='unschedulable'`` instead of wedging the queue.
+- **Cancellation and deadlines**: :meth:`ServingEngine.cancel` removes a
+  request wherever it is (queued or mid-flight, prefill or decode);
+  ``Request(deadline_s=...)`` is a wall-clock budget from submit time,
+  enforced at the top of every :meth:`step_once`.
+- **NaN/Inf watchdog**: every dispatch returns a per-lane finiteness flag
+  on the sampled logits; a non-finite lane fails *only that request*
+  (``error='nonfinite_logits'``) — the batch keeps decoding.
+- **No silent drops**: :meth:`run` returns a report, and if its iteration
+  budget expires with work still queued, that work is marked
+  ``FAILED('stalled')`` instead of being dropped on the floor.
+- **Chaos hooks**: ``ServingEngine(fault_injector=...)`` takes a
+  :class:`repro.serving.faults.FaultInjector` whose ``before_step`` /
+  ``poison_lanes`` hooks deterministically force pool exhaustion, lane
+  NaNs, and mid-flight cancels — the harness behind ``pytest -m chaos``
+  and ``benchmarks/serving_throughput.py --workload overload``.
 """
 from __future__ import annotations
 
 import dataclasses
+import enum
 import time
 from typing import Dict, List, Optional
 
@@ -76,8 +115,29 @@ import numpy as np
 from repro.models import attention as A
 from repro.models.model import Model
 from repro.models.transformer import lm_logits
+from repro.serving.faults import FaultInjector
 from repro.serving.kvpool import PrefixCache
 from repro.serving.sampler import sample_tokens
+
+
+class RequestStatus(str, enum.Enum):
+    """Per-request lifecycle. ``FINISHED`` / ``FAILED`` / ``CANCELLED`` are
+    terminal; ``PREEMPTED`` requests sit in the queue and resume as a
+    prefix-cache hit."""
+    QUEUED = 'queued'
+    PREFILLING = 'prefilling'
+    DECODING = 'decoding'
+    FINISHED = 'finished'
+    FAILED = 'failed'
+    CANCELLED = 'cancelled'
+    PREEMPTED = 'preempted'
+
+
+TERMINAL_STATUSES = frozenset({RequestStatus.FINISHED, RequestStatus.FAILED,
+                               RequestStatus.CANCELLED})
+
+# internal (engine-allocated) uids start far below any plausible caller uid
+_INTERNAL_UID_BASE = -(10 ** 12)
 
 
 @dataclasses.dataclass
@@ -88,7 +148,10 @@ class Request:
     temperature: float = 0.0
     eos_id: Optional[int] = None
     return_logits: bool = False           # collect all-position prompt logits
+    deadline_s: Optional[float] = None    # wall-clock budget from submit time
     # filled by the engine:
+    status: RequestStatus = RequestStatus.QUEUED
+    error: Optional[str] = None           # why status == FAILED
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     submit_t: float = 0.0
@@ -96,8 +159,17 @@ class Request:
     finish_t: float = 0.0
     prompt_logits: Optional[np.ndarray] = None    # (P, V) if return_logits
     prefix_hit_tokens: int = 0            # prompt tokens served from cache
+    preemptions: int = 0                  # times this request was preempted
     _logit_chunks: List[np.ndarray] = dataclasses.field(default_factory=list,
                                                         repr=False)
+    _admit_fails: int = dataclasses.field(default=0, repr=False)
+    _stuck_pos: int = dataclasses.field(default=-1, repr=False)
+    _stuck: int = dataclasses.field(default=0, repr=False)
+    _hold_until: int = dataclasses.field(default=0, repr=False)
+
+    @property
+    def terminal(self) -> bool:
+        return self.status in TERMINAL_STATUSES
 
 
 def _is_body(path) -> bool:
@@ -115,7 +187,9 @@ class ServingEngine:
                  chunk_size: int = 1, fused_gather_rope: bool = False,
                  prefix_cache: bool = False, page_size: int = 16,
                  num_pages: Optional[int] = None,
-                 attn_backend: str = 'reference'):
+                 attn_backend: str = 'reference',
+                 fault_injector: Optional[FaultInjector] = None,
+                 admit_retry_steps: int = 8):
         from repro.models.attn_backend import get_backend
         self.model, self.params = model, params
         self.max_slots, self.max_seq = max_slots, max_seq
@@ -220,10 +294,26 @@ class ServingEngine:
         self.slot_req: List[Optional[Request]] = [None] * max_slots
         self.slot_pos = np.zeros(max_slots, np.int64)       # next position
         self.slot_next_tok = np.zeros(max_slots, np.int32)  # token to feed
+        # the token stream a slot serves: prompt, or prompt + generated-so-far
+        # for a resumed (previously preempted) request
+        self.slot_stream: List[Optional[np.ndarray]] = [None] * max_slots
+        self.slot_admit_seq = np.zeros(max_slots, np.int64)  # LIFO victim tie
         self.queue: List[Request] = []
         self.key = jax.random.PRNGKey(seed)
         self.steps = 0
+        self.ticks = 0      # step_once entries; unlike steps, never freezes
         self.moe_token_drops = 0
+        # ------------------------------------------------ fault tolerance
+        self.fault_injector = fault_injector
+        self._admit_retry_steps = max(1, admit_retry_steps)
+        self._live_uids: set = set()
+        self._internal_uid = _INTERNAL_UID_BASE
+        self._admit_seq = 0
+        self.preemptions = 0
+        self.n_failed = 0
+        self.n_cancelled = 0
+        self.n_deadline = 0
+        self.n_stalled = 0
 
         # ------------------------------------------------ per-slot paging
         if self.paged:
@@ -257,7 +347,9 @@ class ServingEngine:
                 lane_valid=lane_valid, return_stats=True,
                 attn_backend=backend)
             nxt = sample_tokens(logits[:, 0], key, temps)
-            return states, nxt, stats['moe_drops']
+            # NaN/Inf watchdog: per-lane finiteness of the sampled logits
+            finite = jnp.all(jnp.isfinite(logits), axis=(1, 2))
+            return states, nxt, stats['moe_drops'], finite
 
         self._step = jax.jit(step, donate_argnums=1)
 
@@ -267,7 +359,8 @@ class ServingEngine:
                 lane_valid=lane_valid, return_stats=True,
                 attn_backend=backend)
             nxt = sample_tokens(logits[:, 0], key, temps)
-            return states, nxt, stats['moe_drops'], logits          # (B,1,V)
+            finite = jnp.all(jnp.isfinite(logits), axis=(1, 2))
+            return states, nxt, stats['moe_drops'], finite, logits  # (B,1,V)
 
         self._step_logits = jax.jit(step_logits, donate_argnums=1)
 
@@ -284,13 +377,14 @@ class ServingEngine:
             h_last = jnp.take_along_axis(h, idx, axis=1)          # (B,1,d)
             logits = lm_logits(params, h_last, model.cfg)
             nxt = sample_tokens(logits[:, 0], key, temps)
-            return h, states, nxt, stats['moe_drops']
+            finite = jnp.all(jnp.isfinite(logits), axis=(1, 2))
+            return h, states, nxt, stats['moe_drops'], finite
 
         def chunk_step(params, states, tokens, pos, n_valid, key, temps,
                        pt=None, rt=None):
-            _, states, nxt, drops = chunk_hidden(params, states, tokens, pos,
-                                                 n_valid, key, temps, pt, rt)
-            return states, nxt, drops
+            _, states, nxt, drops, finite = chunk_hidden(
+                params, states, tokens, pos, n_valid, key, temps, pt, rt)
+            return states, nxt, drops, finite
 
         def chunk_step_logits(params, states, tokens, pos, n_valid, key,
                               temps, pt=None, rt=None):
@@ -298,9 +392,9 @@ class ServingEngine:
             # (last-valid-lane head), plus the lm_head on EVERY lane for
             # prompt scoring — padding lanes (t >= n_valid) are garbage and
             # dropped host-side.
-            h, states, nxt, drops = chunk_hidden(params, states, tokens, pos,
-                                                 n_valid, key, temps, pt, rt)
-            return states, nxt, drops, lm_logits(params, h, model.cfg)
+            h, states, nxt, drops, finite = chunk_hidden(
+                params, states, tokens, pos, n_valid, key, temps, pt, rt)
+            return states, nxt, drops, finite, lm_logits(params, h, model.cfg)
 
         # paged mode always runs the chunk-shaped program (its T == 1 case
         # is bit-identical to the single-token step), so a paged engine
@@ -403,9 +497,113 @@ class ServingEngine:
         self._restore = jax.jit(restore, donate_argnums=0)
 
     # ------------------------------------------------------------- plumbing
+    def _validate(self, req: Request) -> Optional[str]:
+        prompt = np.atleast_1d(np.asarray(req.prompt))
+        if prompt.size == 0:
+            return 'empty_prompt'
+        if prompt.size + self._meta >= self.max_seq:
+            return 'prompt_too_long'
+        if req.max_new_tokens <= 0:
+            return 'max_new_tokens_not_positive'
+        return None
+
     def submit(self, req: Request) -> None:
+        """Validate and enqueue one request.
+
+        Malformed requests (empty prompt, prompt that cannot fit
+        ``max_seq``, non-positive ``max_new_tokens``) are marked ``FAILED``
+        immediately with ``error`` set — the engine keeps serving everything
+        else. A uid that is already live (queued or in flight) raises
+        ``ValueError``: uids are the cancel/dedup handle and must be unique
+        among concurrent requests.
+        """
         req.submit_t = time.time()
+        err = self._validate(req)
+        if err is not None:
+            req.status = RequestStatus.FAILED
+            req.error = err
+            req.finish_t = req.submit_t
+            self.n_failed += 1
+            return
+        if req.uid in self._live_uids:
+            raise ValueError(f'uid {req.uid} is already live in this engine '
+                             '(queued or in flight); pick a fresh uid')
+        self._live_uids.add(req.uid)
+        req.status = RequestStatus.QUEUED
         self.queue.append(req)
+
+    def _next_internal_uid(self) -> int:
+        """Engine-private uid for internally synthesized requests (scoring):
+        drawn from a counter far below any plausible caller range, skipping
+        anything currently live."""
+        while True:
+            self._internal_uid -= 1
+            if self._internal_uid not in self._live_uids:
+                return self._internal_uid
+
+    def _terminate(self, req: Request, status: RequestStatus,
+                   error: Optional[str] = None) -> None:
+        """Move a request to a terminal status and update counters."""
+        req.status = status
+        req.error = error
+        req.finish_t = time.time()
+        if status is RequestStatus.FINISHED:
+            req.done = True
+        elif status is RequestStatus.FAILED:
+            self.n_failed += 1
+        elif status is RequestStatus.CANCELLED:
+            self.n_cancelled += 1
+        self._live_uids.discard(req.uid)
+
+    def _vacate(self, slot: int) -> None:
+        """Free one slot's scheduling state (and pages, in paged mode)."""
+        self.slot_req[slot] = None
+        self.slot_stream[slot] = None
+        if self.paged:
+            self._release_slot_pages(slot)
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a live request by uid, wherever it is — still queued, or
+        in flight mid-prefill / mid-decode. Returns False if no live
+        request has that uid (already terminal, or never submitted)."""
+        for i, req in enumerate(self.queue):
+            if req.uid == uid:
+                self.queue.pop(i)
+                self._terminate(req, RequestStatus.CANCELLED)
+                return True
+        for s in range(self.max_slots):
+            req = self.slot_req[s]
+            if req is not None and req.uid == uid:
+                self._vacate(s)
+                self._terminate(req, RequestStatus.CANCELLED)
+                return True
+        return False
+
+    def _check_deadlines(self) -> None:
+        """Fail any live request whose wall-clock budget has expired."""
+        now = time.time()
+
+        def expired(req: Request) -> bool:
+            return req.deadline_s is not None \
+                and now - req.submit_t > req.deadline_s
+
+        for s in range(self.max_slots):
+            req = self.slot_req[s]
+            if req is not None and expired(req):
+                self._vacate(s)
+                self.n_deadline += 1
+                self._terminate(req, RequestStatus.FAILED,
+                                'deadline_exceeded')
+        if any(expired(r) for r in self.queue):
+            keep = []
+            for req in self.queue:
+                if expired(req):
+                    self.n_deadline += 1
+                    self._terminate(req, RequestStatus.FAILED,
+                                    'deadline_exceeded')
+                else:
+                    keep.append(req)
+            self.queue = keep
 
     def _reset_slot(self, slot: int) -> None:
         """Restore one slot's state (KV cache validity, recurrent/conv state,
@@ -444,12 +642,15 @@ class ServingEngine:
         self.slot_nblocks[slot] = 0
         self.slot_insert_at[slot] = -1
 
-    def _admit_paged(self, slot: int, req: Request) -> bool:
-        """Prefix lookup + page attach for one admission. Returns False if
-        the pool cannot currently host the request (it goes back to the
-        queue)."""
+    def _admit_paged(self, slot: int, req: Request,
+                     stream: np.ndarray) -> bool:
+        """Prefix lookup + page attach for one admission. ``stream`` is the
+        token stream to serve — the prompt, or prompt + generated-so-far
+        for a resumed (preempted) request, whose published pages make the
+        resume a prefix hit. Returns False if the pool cannot currently
+        host the request (it goes back to the queue)."""
         ps = self.page_size
-        prompt = np.asarray(req.prompt)
+        prompt = stream
         P = len(prompt)
         node, nblocks, pages = None, 0, []
         if not req.return_logits and P > 1:
@@ -514,28 +715,152 @@ class ServingEngine:
         self.slot_next_tok[slot] = int(prompt[eff])
         return True
 
-    def _ensure_blocks(self, slot: int, end_pos: int) -> None:
-        """On-demand linear-page allocation up to position ``end_pos``."""
+    # ---------------------------------------------------------- preemption
+    def _pick_victim(self, exclude=(),
+                     protect_oldest: bool = True) -> Optional[int]:
+        """Preemption victim policy: fewest decoded tokens first (cheapest
+        work to redo), ties broken LIFO (most recently admitted). Scoring
+        slots are never victims — their host-side logit chunks could not
+        survive a requeue-and-resume.
+
+        With ``protect_oldest`` (the default) the longest-admitted in-flight
+        request is also immune. That guarantees global forward progress: two
+        requests that cannot coexist in the pool would otherwise preempt
+        each other forever — fatal for snapshot archs (ring/recurrent),
+        whose mid-page progress cannot be published and is lost on every
+        preemption. Admission escalation may drop the protection as a last
+        resort (a lone never-terminating decoder must stay preemptible)."""
+        protected = None
+        if protect_oldest:
+            live = [(int(self.slot_admit_seq[s]), s)
+                    for s in range(self.max_slots)
+                    if self.slot_req[s] is not None]
+            if live:
+                protected = min(live)[1]
+        best = None
+        for s in range(self.max_slots):
+            req = self.slot_req[s]
+            if req is None or s in exclude or s == protected \
+                    or req.return_logits:
+                continue
+            key = (len(req.generated), -int(self.slot_admit_seq[s]))
+            if best is None or key < best[0]:
+                best = (key, s)
+        return None if best is None else best[1]
+
+    def _publish_preempted(self, slot: int) -> None:
+        """Publish a preempted slot's fully-written pages into the radix
+        index, so its resume is a prefix hit that recomputes only the
+        uncached tail. Blocks may cover generated tokens too — radix keys
+        are token values, and identical tokens at identical positions give
+        bitwise-identical pages."""
+        req = self.slot_req[slot]
+        if req.return_logits:
+            return                          # scoring resumes cold anyway
+        ps = self.page_size
+        pos = int(self.slot_pos[slot])
+        n_blocks = pos // ps
+        if n_blocks <= 0:
+            return
+        # the admit-time stream does not grow during decode — rebuild the
+        # full written token stream (prompt + everything generated)
+        stream = np.atleast_1d(np.asarray(req.prompt))
+        if req.generated:
+            stream = np.concatenate(
+                [stream, np.asarray(req.generated, stream.dtype)])
+        snap = None
+        if self._needs_snapshot:
+            # ring/recurrent state can only resume from a snapshot taken
+            # exactly at a block boundary; mid-page positions can't publish
+            if pos != n_blocks * ps:
+                return
+            ring_ids = jnp.asarray(np.asarray(
+                self.slot_ring[slot] if self.slot_ring[slot]
+                else [self.num_pages], np.int32))
+            snap = self._capture(self.states, jnp.int32(slot), ring_ids)
+        node, transferred = self.kv.insert(
+            stream, n_blocks, list(self._pt[slot, :n_blocks]), snapshot=snap)
+        moved = set(transferred)
+        self.slot_priv[slot] = [p for p in self.slot_priv[slot]
+                                if p not in moved]
+        self.kv.attach(node)
+        self.kv.release(self.slot_node[slot])
+        self.slot_node[slot] = node
+
+    def _preempt_slot(self, slot: int, hold: bool = False) -> None:
+        """Evict one in-flight request from its slot and requeue it at the
+        front. In paged mode its finished pages are published first, so the
+        resume attaches them (prefix hit) and recomputes only the tail —
+        greedy tokens across preempt/resume stay bitwise identical to an
+        uninterrupted run (chunked prefill == token-by-token contract).
+
+        ``hold`` delays re-admission by ``admit_retry_steps`` dispatches —
+        used when a slot yields to pool contention, so the surviving
+        (protected) request gets room to run instead of thrashing."""
+        req = self.slot_req[slot]
+        if self.paged:
+            self._publish_preempted(slot)
+        self._vacate(slot)
+        req.status = RequestStatus.PREEMPTED
+        req.preemptions += 1
+        self.preemptions += 1
+        req._logit_chunks = []              # scoring resumes from position 0
+        if hold:
+            req._hold_until = self.ticks + self._admit_retry_steps
+        self.queue.insert(0, req)
+
+    def _ensure_blocks(self, slot: int, end_pos: int) -> bool:
+        """On-demand linear-page allocation up to position ``end_pos``.
+
+        Pool exhaustion (nothing evictable) is no longer an engine crash:
+        it preempts a victim slot to free pages, falls back to preempting
+        ``slot`` itself, and — if repeated self-preemption makes no forward
+        progress — fails the request as ``unschedulable``. Returns False
+        iff ``slot`` no longer holds its request (preempted or failed)."""
         need = -(-end_pos // self.page_size)
         while self.slot_nblocks[slot] < need:
             alloc = self._alloc_pages(1)
-            if alloc is None:
-                raise RuntimeError(
-                    'KV page pool exhausted (and nothing evictable): raise '
-                    'num_pages or lower max_slots/max_seq')
-            nb = int(self.slot_nblocks[slot])
-            self._pt[slot, nb] = alloc[0]
-            self.slot_priv[slot].append(alloc[0])
-            self.slot_nblocks[slot] = nb + 1
+            if alloc is not None:
+                nb = int(self.slot_nblocks[slot])
+                self._pt[slot, nb] = alloc[0]
+                self.slot_priv[slot].append(alloc[0])
+                self.slot_nblocks[slot] = nb + 1
+                continue
+            victim = self._pick_victim(exclude=(slot,))
+            if victim is not None:
+                self._preempt_slot(victim)
+                continue
+            if any(self.slot_req[s] is not None
+                   for s in range(self.max_slots) if s != slot):
+                # others are in flight but untouchable (protected oldest /
+                # scoring): yield to them with an admission hold — they will
+                # free pages by finishing; this is contention, not a dead
+                # pool, so it never counts toward the stuck escalation
+                self._preempt_slot(slot, hold=True)
+                return False
+            # alone in the engine: preempt ourselves unless we're making no
+            # progress between self-preemptions (pool truly cannot host us)
+            req = self.slot_req[slot]
+            pos = int(self.slot_pos[slot])
+            if pos <= req._stuck_pos:
+                req._stuck += 1
+            else:
+                req._stuck_pos, req._stuck = pos, 0
+            if req._stuck >= 2:
+                self._vacate(slot)
+                self._terminate(req, RequestStatus.FAILED, 'unschedulable')
+            else:
+                self._preempt_slot(slot)
+            return False
+        return True
 
     def _maybe_insert(self, slot: int, p_before: int, p_after: int) -> None:
         """Publish a prefilled prompt's full pages into the radix index."""
         target = int(self.slot_insert_at[slot])
         if target < 0:
             return
-        req = self.slot_req[slot]
         ps = self.page_size
-        prompt = np.asarray(req.prompt)
+        prompt = self.slot_stream[slot]
         P = len(prompt)
         if self._needs_snapshot:
             if p_after != target:
@@ -564,24 +889,67 @@ class ServingEngine:
     def _admit(self) -> None:
         for slot in range(self.max_slots):
             if self.slot_req[slot] is None and self.queue:
+                req = self.queue[0]
+                if req._hold_until > self.ticks and any(
+                        r is not None for r in self.slot_req):
+                    return      # yielding to in-flight work; retry later
                 req = self.queue.pop(0)
+                req._hold_until = 0
+                stream = np.atleast_1d(np.asarray(req.prompt))
+                if req.generated:       # resuming a preempted request
+                    stream = np.concatenate(
+                        [stream, np.asarray(req.generated, stream.dtype)])
                 if self.paged:
-                    if not self._admit_paged(slot, req):
-                        self.queue.insert(0, req)     # pool full: retry later
-                        if not any(r is not None for r in self.slot_req):
-                            # no in-flight request will ever free pages and
-                            # eviction already ran dry: stalling is permanent
-                            raise RuntimeError(
-                                'KV page pool cannot host the queued '
-                                'request (nothing evictable): raise '
-                                'num_pages or lower max_seq')
-                        return
+                    if not self._admit_with_retry(slot, req, stream):
+                        return          # queue head parked (or failed)
+                else:
                     self.slot_req[slot] = req
-                    continue
+                    self.slot_pos[slot] = self._meta  # tokens follow meta
+                    self.slot_next_tok[slot] = int(stream[0])
+                    self._reset_slot(slot)
+                if self.slot_req[slot] is not req:
+                    continue            # admission failed terminally
+                self.slot_stream[slot] = stream
+                self.slot_admit_seq[slot] = self._admit_seq
+                self._admit_seq += 1
+                req.status = RequestStatus.PREFILLING
+                req._admit_fails = 0
+
+    def _admit_with_retry(self, slot: int, req: Request,
+                          stream: np.ndarray) -> bool:
+        """Paged admission with the bounded-retry → preempt →
+        FAILED('unschedulable') escalation (replaces the old heuristic that
+        only detected permanent starvation when *zero* slots were in
+        flight). Returns False when admission should stop for this step —
+        the queue head is parked for retry, or was failed terminally (in
+        which case ``slot_req[slot]`` stays None and the caller skips it).
+        """
+        while True:
+            if self._admit_paged(slot, req, stream):
                 self.slot_req[slot] = req
-                self.slot_pos[slot] = self._meta   # tokens start after meta
-                self.slot_next_tok[slot] = int(req.prompt[0])
-                self._reset_slot(slot)
+                return True
+            req._admit_fails += 1
+            if req._admit_fails <= self._admit_retry_steps:
+                self.queue.insert(0, req)     # pool full: retry next step
+                return False
+            # bounded retries exhausted: preempt a victim to make room —
+            # last resort drops oldest-protection, else a lone
+            # never-terminating decoder starves the queue forever
+            victim = self._pick_victim()
+            if victim is None:
+                victim = self._pick_victim(protect_oldest=False)
+            if victim is not None:
+                self._preempt_slot(victim)
+                req._admit_fails = 0
+                continue
+            if any(r is not None for r in self.slot_req):
+                self.queue.insert(0, req)     # only scoring slots in flight
+                return False
+            # nothing in flight will ever free pages, eviction already ran
+            # dry inside alloc, and the bounded retries gave any external
+            # page squeeze time to lift: unschedulable, per-request
+            self._terminate(req, RequestStatus.FAILED, 'unschedulable')
+            return False
 
     # ----------------------------------------------------------------- run
     def _progress(self, slot: int) -> int:
@@ -589,25 +957,26 @@ class ServingEngine:
         return int(self.slot_pos[slot]) - self._meta
 
     def step_once(self) -> None:
+        self.ticks += 1
+        if self.fault_injector is not None:
+            self.fault_injector.before_step(self)
+        self._check_deadlines()
         self._admit()
         active = [s for s in range(self.max_slots)
                   if self.slot_req[s] is not None]
         if not active:
             return
+        step_idx = self.steps
         prefilling = self.chunk_size > 1 and any(
-            len(self.slot_req[s].prompt) - self._progress(s) > 1
+            len(self.slot_stream[s]) - self._progress(s) > 1
             for s in active)
         # logits-on-demand: any scoring request still consuming its prompt
         # switches this step to the (separately compiled) logits-returning
         # program; steps without scoring work keep the narrow fast path.
         want_logits = any(
             self.slot_req[s].return_logits
-            and self._progress(s) < len(self.slot_req[s].prompt)
+            and self._progress(s) < len(self.slot_stream[s])
             for s in active)
-        temps = jnp.asarray([
-            (self.slot_req[s].temperature if self.slot_req[s] else 0.0)
-            for s in range(self.max_slots)], jnp.float32)
-        pos = jnp.asarray(self.slot_pos.astype(np.int32))
         self.key, sub = jax.random.split(self.key)
 
         logits = None
@@ -620,33 +989,55 @@ class ServingEngine:
             n_valid = np.zeros(self.max_slots, np.int32)
             for s in active:
                 req = self.slot_req[s]
+                if req is None:
+                    continue      # preempted by an earlier slot's _ensure
+                stream = self.slot_stream[s]
                 p = self._progress(s)
-                if p < len(req.prompt):              # prefilling slot
-                    take = min(T, len(req.prompt) - p)
+                if p < len(stream):                  # prefilling slot
+                    take = min(T, len(stream) - p)
                     if self.paged and self._needs_snapshot \
                             and p < self.slot_insert_at[s]:
                         # land exactly on the snapshot boundary so the
                         # captured state is the state after `target` tokens
                         take = min(take, int(self.slot_insert_at[s]) - p)
-                    tokens[s, :take] = req.prompt[p:p + take]
-                    n_valid[s] = take
                 else:                                # decoding slot: 1 token
+                    take = 1
+                if self.paged and not self._ensure_blocks(
+                        s, int(self.slot_pos[s]) + take):
+                    continue      # slot preempted/failed: lane stays empty
+                if p < len(stream):
+                    tokens[s, :take] = stream[p:p + take]
+                else:
                     tokens[s, 0] = self.slot_next_tok[s]
-                    n_valid[s] = 1
-                if self.paged:
-                    self._ensure_blocks(s, int(self.slot_pos[s])
-                                        + int(n_valid[s]))
+                n_valid[s] = take
+            # a preemption above may have vacated an already-scheduled lane
+            for s in range(self.max_slots):
+                if self.slot_req[s] is None and n_valid[s]:
+                    tokens[s] = 0
+                    n_valid[s] = 0
+            active = [s for s in active
+                      if self.slot_req[s] is not None and n_valid[s] > 0]
+            if not active:
+                return            # everything was preempted this step
+            temps = jnp.asarray([
+                (self.slot_req[s].temperature if self.slot_req[s] else 0.0)
+                for s in range(self.max_slots)], jnp.float32)
+            pos = jnp.asarray(self.slot_pos.astype(np.int32))
             args = [self.params, self.states, jnp.asarray(tokens), pos,
                     jnp.asarray(n_valid), sub, temps]
             if self.paged:
                 args += [jnp.asarray(self._pt), jnp.asarray(self._rt)]
             if want_logits:
-                self.states, nxt, drops, logits = \
+                self.states, nxt, drops, finite, logits = \
                     self._chunk_step_logits(*args)
             else:
-                self.states, nxt, drops = self._chunk_step(*args)
+                self.states, nxt, drops, finite = self._chunk_step(*args)
             consumed = n_valid
         else:
+            temps = jnp.asarray([
+                (self.slot_req[s].temperature if self.slot_req[s] else 0.0)
+                for s in range(self.max_slots)], jnp.float32)
+            pos = jnp.asarray(self.slot_pos.astype(np.int32))
             tokens = jnp.asarray(self.slot_next_tok[:, None])
             lane_valid = jnp.asarray(np.asarray(
                 [self.slot_req[s] is not None
@@ -654,34 +1045,51 @@ class ServingEngine:
             args = (self.params, self.states, tokens, pos, sub, temps,
                     lane_valid)
             if want_logits:
-                self.states, nxt, drops, logits = self._step_logits(*args)
+                self.states, nxt, drops, finite, logits = \
+                    self._step_logits(*args)
             else:
-                self.states, nxt, drops = self._step(*args)
+                self.states, nxt, drops, finite = self._step(*args)
             consumed = np.ones(self.max_slots, np.int32)
 
         nxt = np.asarray(nxt)
+        bad = ~np.asarray(finite)
+        if self.fault_injector is not None:
+            for s in self.fault_injector.poison_lanes(self, step_idx):
+                if 0 <= s < self.max_slots:
+                    bad[s] = True
         self.moe_token_drops += int(drops)
         if logits is not None:
             logits = np.asarray(logits)
         self.steps += 1
         for s in active:
             req = self.slot_req[s]
+            if req is None:
+                continue
+            if bad[s]:
+                # NaN/Inf watchdog: fail only the offending lane — its
+                # cache rows are garbage, but they free with the slot
+                self._vacate(s)
+                self._terminate(req, RequestStatus.FAILED,
+                                'nonfinite_logits')
+                continue
+            stream = self.slot_stream[s]
             p_before = self._progress(s)
             self.slot_pos[s] += int(consumed[s])
-            p = self._progress(s)                    # progress within request
+            p = self._progress(s)                    # progress within stream
             if self.paged:
                 self._maybe_insert(s, p_before, p)
-            if req.return_logits and p_before < len(req.prompt):
-                # lanes 0..consumed-1 hold logits for prompt[p_before..p-1];
+            if req.return_logits and p_before < len(stream):
+                # lanes 0..consumed-1 hold logits for stream[p_before..p-1];
                 # copy so the slice doesn't pin the whole step's (B,T,V)
                 # array in memory for the rest of the prefill
                 req._logit_chunks.append(logits[s, :int(consumed[s])].copy())
-                if p >= len(req.prompt):
+                if p >= len(stream):
                     req.prompt_logits = np.concatenate(req._logit_chunks, 0)
                     req._logit_chunks = []
-            if p < len(req.prompt):                  # still prefilling
-                self.slot_next_tok[s] = int(req.prompt[p])
+            if p < len(stream):                      # still prefilling
+                self.slot_next_tok[s] = int(stream[p])
                 continue
+            req.status = RequestStatus.DECODING
             tok = int(nxt[s])
             if not req.generated:
                 req.first_token_t = time.time()
@@ -690,17 +1098,39 @@ class ServingEngine:
             hit_eos = req.eos_id is not None and tok == req.eos_id
             if hit_eos or len(req.generated) >= req.max_new_tokens \
                     or int(self.slot_pos[s]) + 1 >= self.max_seq:
-                req.done, req.finish_t = True, time.time()
-                self.slot_req[s] = None
-                if self.paged:
-                    self._release_slot_pages(s)
+                self._vacate(s)
+                self._terminate(req, RequestStatus.FINISHED)
 
-    def run(self, max_iters: int = 100_000) -> None:
+    def run(self, max_iters: int = 100_000) -> Dict[str, int]:
+        """Drive the engine until all submitted work reaches a terminal
+        status, or ``max_iters`` engine steps elapse.
+
+        Never returns silently with half-finished work: if the iteration
+        budget expires, still-queued requests are marked
+        ``FAILED('stalled')`` and the returned report says how much work
+        was abandoned (requests still occupying slots keep their state and
+        resume on the next ``run()`` call)."""
         it = 0
         while (self.queue or any(r is not None for r in self.slot_req)) \
                 and it < max_iters:
             self.step_once()
             it += 1
+        stalled = 0
+        if it >= max_iters and self.queue:
+            for req in self.queue:
+                self._terminate(req, RequestStatus.FAILED, 'stalled')
+                stalled += 1
+            self.queue = []
+            self.n_stalled += stalled
+        return {
+            'iters': it,
+            'stalled': stalled,
+            'in_flight': sum(r is not None for r in self.slot_req),
+            'preemptions': self.preemptions,
+            'failed': self.n_failed,
+            'cancelled': self.n_cancelled,
+            'deadline_exceeded': self.n_deadline,
+        }
 
     def score(self, prompts: List[np.ndarray]) -> List[np.ndarray]:
         """Logits-on-demand for prompt-scoring workloads: run each prompt
@@ -710,11 +1140,14 @@ class ServingEngine:
         ``log_softmax(out[i][t - 1])[prompts[i][t]]`` scores token ``t``.
         Shares slots/steps with any concurrently queued generation work.
         Scoring prompts always prefill cold (every position's logits are
-        required), even in a prefix-cached engine.
+        required), even in a prefix-cached engine. Internal uids come from
+        a private counter so they can never collide with caller-chosen uids
+        live in the same engine.
         """
-        reqs = [Request(uid=-1 - i, prompt=np.asarray(p, np.int32),
+        reqs = [Request(uid=self._next_internal_uid(),
+                        prompt=np.asarray(p, np.int32),
                         max_new_tokens=1, return_logits=True)
-                for i, p in enumerate(prompts)]
+                for p in prompts]
         for r in reqs:
             self.submit(r)
         self.run()
@@ -735,6 +1168,12 @@ class ServingEngine:
             'mean_ttft_s': float(np.mean(ttft)) if ttft else 0.0,
             'engine_steps': self.steps,
             'moe_token_drops': self.moe_token_drops,
+            # failure-semantics counters (engine lifetime totals)
+            'preemptions': self.preemptions,
+            'failed': self.n_failed,
+            'cancelled': self.n_cancelled,
+            'deadline_exceeded': self.n_deadline,
+            'stalled': self.n_stalled,
         }
         if self.kv is not None:
             out.update(self.kv.stats())

@@ -110,6 +110,21 @@ class PrefixCache:
             assert p != NULL_PAGE, 'freeing the null page'
             self._free.append(int(p))
 
+    def reclaimable(self) -> int:
+        """Pages that ``alloc`` could obtain right now: the free list plus
+        every refcount-0 cached block (a refs-0 node's whole subtree is
+        refs-0, so each such node is one evictable page). The engine's
+        preemption/admission decisions don't need this — ``alloc`` already
+        evicts on demand — but overload diagnostics do."""
+        n = len(self._free)
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            if node is not self.root and not node.refs:
+                n += 1
+        return n
+
     def _evict_one(self) -> bool:
         """Drop the least-recently-used refcount-0 leaf block."""
         victim: Optional[RadixNode] = None
@@ -216,6 +231,13 @@ class PrefixCache:
         the radix tree and the returned ``transferred`` list names them so
         the caller stops treating them as private. ``snapshot`` lands on
         the deepest node.
+
+        Besides prefill publishing, this is the engine's preemption
+        mechanism: a preempted slot publishes every fully-written page
+        (prompt AND generated tokens — radix keys are token values, so
+        identical tokens at identical positions give bitwise-identical
+        pages) before releasing, making its resume a prefix hit that
+        recomputes only the uncached tail.
         """
         ps = self.page_size
         assert n_blocks * ps <= len(tokens) and n_blocks <= len(pages)
@@ -245,5 +267,6 @@ class PrefixCache:
             'prefix_hit_tokens': self.hit_tokens,
             'pages_in_use': self.pages_in_use(),
             'pages_free': self.pages_free(),
+            'pages_reclaimable': self.reclaimable(),
             'evictions': self.evictions,
         }

@@ -1,0 +1,366 @@
+"""Fault-tolerant serving: the failure paths, on purpose.
+
+Every failure mode in ``repro.serving.engine`` must be a per-request
+outcome, never an engine exception — and the identity contract (paged ==
+dense, bit for bit) must survive the failure paths too. This module covers:
+
+- submit-time validation and duplicate-uid rejection (plus ``score()``'s
+  private internal uids no longer colliding with caller uids);
+- ``cancel()`` for queued and mid-prefill requests, wall-clock deadlines;
+- the NaN/Inf logit watchdog failing only the offending lane;
+- pool-exhaustion preemption: mid-decode ``_ensure_blocks`` exhaustion and
+  eviction-dry admission now preempt (fewest-decoded / LIFO victim, oldest
+  in flight protected) instead of raising ``RuntimeError``, and preempted
+  requests' tokens stay bitwise identical to an uninterrupted run;
+- the bounded-retry -> preempt -> FAILED('unschedulable') admission
+  escalation and ``run()``'s stall report;
+- a property over random (steal-step, steal-amount, restore-step) fault
+  schedules across GQA / MLA / hybrid configs (hypothesis when available,
+  plus seeded example schedules that always run).
+
+Fault-injection tests are marked ``chaos`` (``pytest -m chaos``).
+"""
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.config import MLAConfig, ModelConfig, SSMConfig
+from repro.models.model import Model
+from repro.serving import Request, ScriptedFaults, ServingEngine
+from repro.serving.engine import RequestStatus
+
+PS = 8
+MAX_SEQ = 64
+
+
+def _cfg(kind):
+    base = dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                head_dim=16, d_ff=128, vocab_size=211, max_seq_len=256,
+                dtype='float32')
+    if kind == 'gqa':
+        return ModelConfig(name='ft-gqa', arch_class='dense', **base)
+    if kind == 'mla':
+        base = dict(base, num_kv_heads=4)
+        return ModelConfig(name='ft-mla', arch_class='dense',
+                           tie_embeddings=False,
+                           mla=MLAConfig(kv_lora_rank=16, q_lora_rank=0,
+                                         qk_nope_dim=16, qk_rope_dim=8,
+                                         v_head_dim=16), **base)
+    if kind == 'hybrid':
+        return ModelConfig(name='ft-hyb', arch_class='hybrid',
+                           pattern=('hybrid_global', 'hybrid'), window=8,
+                           ssm=SSMConfig(conv_kernel=4, state_dim=8,
+                                         num_ssm_heads=4), **base)
+    raise ValueError(kind)
+
+
+_BUILT = {}
+
+
+def _build(kind):
+    if kind not in _BUILT:
+        cfg = _cfg(kind)
+        model = Model(cfg)
+        _BUILT[kind] = (model, model.init(jax.random.PRNGKey(0)))
+    return _BUILT[kind]
+
+
+def _prompts(n=4, seed=7, vocab=211):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(3, vocab, size=k).astype(np.int32)
+            for k in (28, 23, 17, 25)[:n]]
+
+
+_REF = {}
+
+
+def _reference(kind, n=4, new_tokens=8):
+    """Greedy tokens from the dense engine, no faults — the oracle."""
+    key = (kind, n, new_tokens)
+    if key not in _REF:
+        model, params = _build(kind)
+        eng = ServingEngine(model, params, max_slots=2, max_seq=MAX_SEQ,
+                            chunk_size=4)
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=new_tokens)
+                for i, p in enumerate(_prompts(n))]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        _REF[key] = [list(r.generated) for r in reqs]
+    return _REF[key]
+
+
+def _paged(kind, *, num_pages, fault_injector=None, max_slots=2,
+           admit_retry_steps=8):
+    model, params = _build(kind)
+    return ServingEngine(model, params, max_slots=max_slots, max_seq=MAX_SEQ,
+                        chunk_size=4, prefix_cache=True, page_size=PS,
+                        num_pages=num_pages, fault_injector=fault_injector,
+                        admit_retry_steps=admit_retry_steps)
+
+
+# ------------------------------------------------------------- validation
+def test_submit_validation_fails_request_not_engine():
+    model, params = _build('gqa')
+    eng = ServingEngine(model, params, max_slots=2, max_seq=MAX_SEQ,
+                        chunk_size=4)
+    bad = [
+        (Request(uid=10, prompt=np.array([], np.int32), max_new_tokens=4),
+         'empty_prompt'),
+        (Request(uid=11, prompt=np.arange(3, 3 + MAX_SEQ).astype(np.int32),
+                 max_new_tokens=4), 'prompt_too_long'),
+        (Request(uid=12, prompt=np.array([5, 6, 7], np.int32),
+                 max_new_tokens=0), 'max_new_tokens_not_positive'),
+    ]
+    good = Request(uid=13, prompt=_prompts(1)[0], max_new_tokens=4)
+    for r, _ in bad:
+        eng.submit(r)
+    eng.submit(good)
+    stats = eng.run()
+    for r, err in bad:
+        assert r.status is RequestStatus.FAILED and r.error == err
+        assert not r.generated
+    assert good.status is RequestStatus.FINISHED
+    assert len(good.generated) == 4
+    assert stats['failed'] == 3
+
+
+def test_duplicate_live_uid_rejected_then_reusable():
+    model, params = _build('gqa')
+    eng = ServingEngine(model, params, max_slots=2, max_seq=MAX_SEQ,
+                        chunk_size=4)
+    p = _prompts(1)[0]
+    eng.submit(Request(uid=5, prompt=p, max_new_tokens=2))
+    with pytest.raises(ValueError):
+        eng.submit(Request(uid=5, prompt=p, max_new_tokens=2))
+    eng.run()
+    # uid 5 is terminal now: no longer live, free to reuse
+    again = Request(uid=5, prompt=p, max_new_tokens=2)
+    eng.submit(again)
+    eng.run()
+    assert again.status is RequestStatus.FINISHED
+
+
+def test_score_uids_never_collide_with_caller_uids():
+    """score() used to synthesize uid=-1-i; a caller holding uid=-1 would
+    collide. Internal uids now come from a private counter."""
+    model, params = _build('gqa')
+    eng = ServingEngine(model, params, max_slots=2, max_seq=MAX_SEQ,
+                        chunk_size=4)
+    p = _prompts(2)
+    gen = Request(uid=-1, prompt=p[0], max_new_tokens=64)  # parks in a slot
+    eng.submit(gen)
+    logits = eng.score([p[1][:6], p[1][:9]])
+    assert logits[0].shape == (6, 211) and logits[1].shape == (9, 211)
+    assert gen.status is RequestStatus.FINISHED
+
+
+# --------------------------------------------------------- cancel/deadline
+def test_cancel_queued_request():
+    model, params = _build('gqa')
+    eng = ServingEngine(model, params, max_slots=1, max_seq=MAX_SEQ,
+                        chunk_size=4)
+    p = _prompts(2)
+    keep = Request(uid=0, prompt=p[0], max_new_tokens=4)
+    drop = Request(uid=1, prompt=p[1], max_new_tokens=4)
+    eng.submit(keep)
+    eng.submit(drop)
+    assert eng.cancel(1) is True
+    assert eng.cancel(1) is False           # already terminal
+    assert eng.cancel(999) is False         # never submitted
+    eng.run()
+    assert drop.status is RequestStatus.CANCELLED and not drop.generated
+    assert keep.status is RequestStatus.FINISHED
+
+
+@pytest.mark.chaos
+def test_cancel_mid_prefill_via_injector():
+    faults = ScriptedFaults(cancel_uids={3: [0]})    # tick 3: mid-prefill
+    eng = _paged('gqa', num_pages=32, fault_injector=faults)
+    p = _prompts(2)
+    victim = Request(uid=0, prompt=p[0], max_new_tokens=8)
+    other = Request(uid=1, prompt=p[1], max_new_tokens=8)
+    eng.submit(victim)
+    eng.submit(other)
+    eng.run()
+    assert victim.status is RequestStatus.CANCELLED
+    assert not victim.done
+    assert other.status is RequestStatus.FINISHED
+    assert list(other.generated) == _reference('gqa', 2)[1]
+
+
+def test_deadline_exceeded_marks_request_failed():
+    model, params = _build('gqa')
+    eng = ServingEngine(model, params, max_slots=1, max_seq=MAX_SEQ,
+                        chunk_size=4)
+    p = _prompts(2)
+    late = Request(uid=0, prompt=p[0], max_new_tokens=4, deadline_s=0.0)
+    ok = Request(uid=1, prompt=p[1], max_new_tokens=4)
+    eng.submit(late)
+    eng.submit(ok)
+    stats = eng.run()
+    assert late.status is RequestStatus.FAILED
+    assert late.error == 'deadline_exceeded'
+    assert ok.status is RequestStatus.FINISHED
+    assert stats['deadline_exceeded'] == 1
+
+
+# --------------------------------------------------------------- watchdog
+@pytest.mark.chaos
+def test_nan_watchdog_fails_only_offending_lane():
+    ref = _reference('gqa', 2)
+    # poison slot 0's logits on a decode step; slot 1 must be untouched
+    faults = ScriptedFaults(nan_lanes={9: [0]})
+    eng = _paged('gqa', num_pages=32, fault_injector=faults)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=8)
+            for i, p in enumerate(_prompts(2))]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert reqs[0].status is RequestStatus.FAILED
+    assert reqs[0].error == 'nonfinite_logits'
+    assert reqs[1].status is RequestStatus.FINISHED
+    assert list(reqs[1].generated) == ref[1]
+
+
+# ------------------------------------------------------------- preemption
+@pytest.mark.parametrize('kind,num_pages', [
+    ('gqa', 8), ('mla', 8), ('hybrid', 10),
+])
+def test_preemption_bit_identity(kind, num_pages):
+    """Pool sized below aggregate demand: the engine must preempt (not
+    raise), finish everything, and match the dense engine bit for bit."""
+    ref = _reference(kind)
+    eng = _paged(kind, num_pages=num_pages)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=8)
+            for i, p in enumerate(_prompts())]
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.run(max_iters=5000)
+    assert stats['preemptions'] >= 1
+    assert stats['stalled'] == 0 and stats['in_flight'] == 0
+    for r, want in zip(reqs, ref):
+        assert r.status is RequestStatus.FINISHED
+        assert list(r.generated) == want, \
+            f'{kind} uid={r.uid}: preempted tokens diverged'
+    assert any(r.preemptions > 0 for r in reqs)
+
+
+@pytest.mark.chaos
+def test_ensure_blocks_exhaustion_mid_decode_preempts():
+    """Steal the free pool mid-decode: ``_ensure_blocks`` hits exhaustion
+    on the real allocation path and must preempt, not raise."""
+    ref = _reference('gqa', 2)
+    faults = ScriptedFaults(steal_pages={8: 64}, restore_pages_at=(20,))
+    eng = _paged('gqa', num_pages=24, fault_injector=faults)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=8)
+            for i, p in enumerate(_prompts(2))]
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.run(max_iters=5000)
+    assert stats['preemptions'] >= 1
+    for r, want in zip(reqs, ref):
+        assert r.status is RequestStatus.FINISHED
+        assert list(r.generated) == want
+    faults.release_stolen(eng)
+
+
+@pytest.mark.chaos
+def test_eviction_dry_admission_preempts_not_raises():
+    """Admission with an eviction-dry pool (every page pinned by live
+    slots) escalates bounded-retry -> preempt; the preempted request
+    resumes and still finishes identically."""
+    ref = _reference('gqa', 3)
+    eng = _paged('gqa', num_pages=8, max_slots=3, admit_retry_steps=2)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=8)
+            for i, p in enumerate(_prompts(3))]
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.run(max_iters=5000)
+    assert stats['preemptions'] >= 1
+    for r, want in zip(reqs, ref):
+        assert r.status is RequestStatus.FINISHED
+        assert list(r.generated) == want
+
+
+def test_unschedulable_request_fails_gracefully():
+    """A request whose page demand exceeds the whole pool can never run:
+    after the self-preemption escalation it must come back FAILED
+    ('unschedulable') — not spin forever, not kill the engine."""
+    eng = _paged('gqa', num_pages=4)
+    p = _prompts(2)
+    big = Request(uid=0, prompt=p[0], max_new_tokens=24)   # > pool pages
+    ok = Request(uid=1, prompt=p[1][:6], max_new_tokens=4)
+    eng.submit(big)
+    eng.submit(ok)
+    stats = eng.run(max_iters=2000)
+    assert big.status is RequestStatus.FAILED
+    assert big.error == 'unschedulable'
+    assert ok.status is RequestStatus.FINISHED
+    assert len(ok.generated) == 4
+    assert stats['in_flight'] == 0
+
+
+def test_run_stall_report_and_resume():
+    """run() never returns silently with half-finished work: queued
+    leftovers are FAILED('stalled') and counted; in-flight slots keep
+    their state and resume on the next run()."""
+    model, params = _build('gqa')
+    eng = ServingEngine(model, params, max_slots=1, max_seq=MAX_SEQ,
+                        chunk_size=4)
+    p = _prompts(3)
+    first = Request(uid=0, prompt=p[0], max_new_tokens=4)
+    starved = [Request(uid=1 + i, prompt=q, max_new_tokens=4)
+               for i, q in enumerate(p[1:])]
+    eng.submit(first)
+    for r in starved:
+        eng.submit(r)
+    stats = eng.run(max_iters=2)
+    assert stats['stalled'] == 2
+    assert all(r.status is RequestStatus.FAILED and r.error == 'stalled'
+               for r in starved)
+    assert first.status is not RequestStatus.FAILED  # still in its slot
+    stats2 = eng.run()                               # resumes in-flight work
+    assert first.status is RequestStatus.FINISHED
+    assert stats2['in_flight'] == 0
+
+
+# ------------------------------------------------ random fault schedules
+def _run_fault_schedule(kind, steal_step, steal_n, hold_steps):
+    ref = _reference(kind)
+    faults = ScriptedFaults(steal_pages={steal_step: steal_n},
+                            restore_pages_at=(steal_step + hold_steps,))
+    eng = _paged(kind, num_pages=16, fault_injector=faults)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=8)
+            for i, p in enumerate(_prompts())]
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.run(max_iters=5000)
+    faults.release_stolen(eng)
+    assert stats['stalled'] == 0 and stats['in_flight'] == 0
+    for r, want in zip(reqs, ref):
+        assert r.status is RequestStatus.FINISHED, \
+            f'{kind} uid={r.uid} ended {r.status} ({r.error})'
+        assert list(r.generated) == want, \
+            f'{kind} uid={r.uid}: tokens diverged under fault schedule ' \
+            f'steal@{steal_step}x{steal_n} hold={hold_steps}'
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize('kind', ['gqa', 'mla', 'hybrid'])
+@pytest.mark.parametrize('schedule', [(3, 10, 6), (9, 6, 9), (14, 12, 4)])
+def test_random_fault_schedules_bit_identical(kind, schedule):
+    """Seeded (steal-step, amount, hold) schedules: preempt-at-arbitrary-
+    point + resume must reproduce the unfaulted tokens exactly."""
+    _run_fault_schedule(kind, *schedule)
+
+
+@pytest.mark.chaos
+@settings(max_examples=5, deadline=None)
+@given(steal_step=st.integers(2, 16), steal_n=st.integers(4, 14),
+       hold_steps=st.integers(2, 10))
+def test_fault_schedule_property_gqa(steal_step, steal_n, hold_steps):
+    """Property form (hypothesis, when installed): ANY single pool-squeeze
+    schedule preserves bit-identity on the GQA config."""
+    _run_fault_schedule('gqa', steal_step, steal_n, hold_steps)
