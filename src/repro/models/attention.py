@@ -446,6 +446,73 @@ class PageTables:
         return self.pt, self.pt.shape[1] * page_size
 
 
+# ============================================================ packed prefill
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedLayout:
+    """Segment-packed chunk layout (prepacking, arXiv 2404.09529).
+
+    The serving engine bin-packs every active slot's chunk segment (its
+    ``n_valid`` tokens) into a smaller ``(R, T)`` token grid,
+    ``R <= max_slots``: slot ``s``'s segment occupies row ``seg_row[s]``,
+    columns ``seg_off[s] .. seg_off[s] + n_valid[s] - 1``. Token-wise
+    compute (embedding / precomputed-row gather, norms, FFN, residuals,
+    lm head) runs on the packed grid; each mixer (attention / MLA / SSM /
+    hybrid) runs on the slot-major ``(S, T)`` layout reached by
+    :meth:`to_slots` and scattered back with :meth:`to_lanes`. Both are
+    exact index copies, so every cache write, page-table scatter and
+    masked recurrent-state commit keeps its unpacked shapes and therefore
+    its bitwise-identical semantics — and cross-segment attention is
+    structurally impossible: a slot's queries only ever meet that slot's
+    own cache rows (whose stored-position validity mask already hides
+    not-yet-written entries).
+
+    ``seg_row`` / ``seg_off``: (S,) int32 — inactive slots point at
+    (0, 0) so gathers stay in bounds (their lanes are garbage, never
+    consumed). ``lane_slot`` / ``lane_local``: (R, T) int32 — owning slot
+    and in-segment offset per packed lane (0 on empty lanes).
+    ``lane_pos``: (R, T) int32 absolute token position per lane (0 on
+    empty lanes). ``lane_valid``: (R, T) bool.
+    """
+    seg_row: jax.Array
+    seg_off: jax.Array
+    lane_slot: jax.Array
+    lane_local: jax.Array
+    lane_pos: jax.Array
+    lane_valid: jax.Array
+
+    def tree_flatten(self):
+        return (self.seg_row, self.seg_off, self.lane_slot, self.lane_local,
+                self.lane_pos, self.lane_valid), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def to_slots(self, x: jax.Array) -> jax.Array:
+        """Gather packed ``(R, T, ...)`` values into slot-major
+        ``(S, T, ...)``: slot ``s``'s lane ``t`` reads packed lane
+        ``(seg_row[s], seg_off[s] + t)``. Lanes past a slot's segment read
+        clipped in-row garbage — exactly as inert as the unpacked path's
+        ``t >= n_valid`` padding lanes."""
+        R, T = self.lane_slot.shape
+        t = jnp.arange(T, dtype=jnp.int32)[None]
+        cols = jnp.minimum(self.seg_off[:, None] + t, T - 1)
+        idx = self.seg_row[:, None] * T + cols                   # (S, T)
+        flat = x.reshape((R * T,) + x.shape[2:])
+        return flat[idx]
+
+    def to_lanes(self, y: jax.Array) -> jax.Array:
+        """Scatter slot-major ``(S, T, ...)`` values back onto the packed
+        grid: packed lane ``(r, t)`` reads
+        ``y[lane_slot[r, t], lane_local[r, t]]`` (garbage on empty
+        lanes)."""
+        S, T = y.shape[:2]
+        idx = self.lane_slot * T + self.lane_local               # (R, T)
+        flat = y.reshape((S * T,) + y.shape[2:])
+        return flat[idx]
+
+
 def make_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int, *,
                      dtype=jnp.bfloat16, quant: bool = False
                      ) -> Dict[str, jax.Array]:

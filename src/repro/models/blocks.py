@@ -356,7 +356,9 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
                  rope_applied: bool = False,
                  paged: Optional[A.PageTables] = None,
                  lane_valid: Optional[jax.Array] = None,
-                 backend=None) -> Tuple[jax.Array, Dict, jax.Array]:
+                 backend=None,
+                 packed: Optional[A.PackedLayout] = None
+                 ) -> Tuple[jax.Array, Dict, jax.Array]:
     """Decode step. h: (B,T,d); pos: (B,) start positions.
     -> (h_out, state, moe_dropped_token_slots).
 
@@ -376,19 +378,35 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
     path derives its lane mask from ``n_valid``. ``backend`` (an
     ``attn_backend.AttnBackend``; None = reference) picks the attend
     implementation for every attention family, MLA and hybrid included.
+
+    ``packed`` (an ``attention.PackedLayout``) runs the segment-packed
+    chunk layout: ``h`` (and ``pre``) live on the bin-packed (R, T) grid
+    while ``pos`` / ``n_valid`` / ``state`` stay slot-major. Token-wise
+    compute (norms, FFN/MoE, residuals) runs packed; each mixer's inputs
+    are gathered to the slot-major (S, T) layout (``packed.to_slots``),
+    the mixer runs the unchanged unpacked code against the unchanged
+    per-slot caches/states, and its output is scattered back onto the
+    packed grid (``packed.to_lanes``) — bit-identical to the unpacked
+    chunked path by construction.
     """
     theta = kind_theta(cfg, kind)
     window = kind_window(cfg, kind)
     chunked = n_valid is not None
     assert paged is None or chunked, 'paged decode runs the chunked path'
-    if chunked:
-        T = h.shape[1]
-        lane_mask = jnp.arange(T, dtype=jnp.int32)[None] \
-            < n_valid.astype(jnp.int32)[:, None]
-    elif lane_valid is not None:
-        lane_mask = lane_valid[:, None]
+    assert packed is None or chunked, 'packed decode runs the chunked path'
+    if packed is not None:
+        lane_mask = packed.lane_valid
+        ts, tl = packed.to_slots, packed.to_lanes
     else:
-        lane_mask = None
+        ts = tl = lambda x: x
+        if chunked:
+            T = h.shape[1]
+            lane_mask = jnp.arange(T, dtype=jnp.int32)[None] \
+                < n_valid.astype(jnp.int32)[:, None]
+        elif lane_valid is not None:
+            lane_mask = lane_valid[:, None]
+        else:
+            lane_mask = None
     zero = jnp.zeros((), jnp.int32)
 
     def attend(xn, qkv):
@@ -414,32 +432,33 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
     if kind in ATTN_KINDS:
         if cfg.block_type == 'parallel':
             if pre is not None:
-                s, qkv = pre['s'], (pre['q'], pre['k'], pre['v'])
+                s, qkv = pre['s'], (ts(pre['q']), ts(pre['k']), ts(pre['v']))
                 attn_out, state = attend(None, qkv)
-                return s + attn_out, state, zero
+                return s + tl(attn_out), state, zero
             xn = L.norm_apply(params['ln1'], h, cfg.norm)
-            attn_out, state = attend(xn, None)
+            attn_out, state = attend(ts(xn), None)
             xn2 = L.norm_apply(params['ln2'], h, cfg.norm)
             if use_moe:
                 f, _, drops = moe_apply(params['moe'], xn2, cfg,
                                         lane_mask=lane_mask)
             else:
                 f, drops = ffn_apply(params['ffn'], xn2, act=cfg.act), zero
-            return h + attn_out + f, state, drops
+            return h + tl(attn_out) + f, state, drops
         # serial
         if pre is not None:
             if cfg.mla:
                 attn_out, state = attend_mla(
-                    None, (pre['q'], pre['ckv'], pre['kpe']))
+                    None, (ts(pre['q']), ts(pre['ckv']), ts(pre['kpe'])))
             else:
-                attn_out, state = attend(None, (pre['q'], pre['k'], pre['v']))
+                attn_out, state = attend(
+                    None, (ts(pre['q']), ts(pre['k']), ts(pre['v'])))
         else:
             xn = L.norm_apply(params['ln1'], h, cfg.norm)
             if cfg.mla:
-                attn_out, state = attend_mla(xn, None)
+                attn_out, state = attend_mla(ts(xn), None)
             else:
-                attn_out, state = attend(xn, None)
-        h = h + attn_out
+                attn_out, state = attend(ts(xn), None)
+        h = h + tl(attn_out)
         xn2 = L.norm_apply(params['ln2'], h, cfg.norm)
         if use_moe:
             f, _, drops = moe_apply(params['moe'], xn2, cfg,
@@ -452,11 +471,11 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
 
     if kind in HYBRID_KINDS:
         if pre is not None:
-            qkv = (pre['q'], pre['k'], pre['v'])
-            mpre = {'x_in': pre['x_in'], 'gate': pre['gate']}
+            qkv = (ts(pre['q']), ts(pre['k']), ts(pre['v']))
+            mpre = {'x_in': ts(pre['x_in']), 'gate': ts(pre['gate'])}
             xn = None
         else:
-            xn = L.norm_apply(params['ln1'], h, cfg.norm)
+            xn = ts(L.norm_apply(params['ln1'], h, cfg.norm))
             qkv = A.compute_qkv(params['attn'], xn, cfg)
             mpre = None
         q, k, v = qkv
@@ -481,7 +500,7 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
                                      pre=mpre, n_valid=n_valid)
         mix = 0.5 * (L.rmsnorm(ctx, params['norm_attn']['scale'])
                      + L.rmsnorm(y_ssm, params['norm_ssm']['scale']))
-        h = h + L.dense(params['w_out'], mix)
+        h = h + L.dense(params['w_out'], tl(mix))
         xn2 = L.norm_apply(params['ln2'], h, cfg.norm)
         return h + ffn_apply(params['ffn'], xn2, act=cfg.act), \
             {'attn': acache, 'ssm': sstate}, zero
@@ -489,23 +508,24 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
     if kind == 'mlstm':
         if pre is not None:
             y, state = S.mlstm_step(params['core'], None, state, cfg,
-                                    pre={k: pre[k] for k in
+                                    pre={k: ts(pre[k]) for k in
                                          ('u1', 'u2', 'v', 'ifg')},
                                     n_valid=n_valid)
         else:
-            xn = L.norm_apply(params['ln1'], h, cfg.norm)
+            xn = ts(L.norm_apply(params['ln1'], h, cfg.norm))
             y, state = S.mlstm_step(params['core'], xn, state, cfg,
                                     n_valid=n_valid)
-        return h + y, state, zero
+        return h + tl(y), state, zero
 
     if kind == 'slstm':
-        xn = L.norm_apply(params['ln1'], h, cfg.norm)
+        xn = ts(L.norm_apply(params['ln1'], h, cfg.norm))
         if pre is not None:
-            spre = {'z_in': pre['z_in'], 'o_in': pre['o_in'], 'xn': xn}
+            spre = {'z_in': ts(pre['z_in']), 'o_in': ts(pre['o_in']),
+                    'xn': xn}
             y, state = S.slstm_step(params['core'], None, state, cfg,
                                     pre=spre, n_valid=n_valid)
         else:
             y, state = S.slstm_step(params['core'], xn, state, cfg,
                                     n_valid=n_valid)
-        return h + y, state, zero
+        return h + tl(y), state, zero
     raise ValueError(kind)

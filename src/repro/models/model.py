@@ -82,7 +82,7 @@ class Model:
                     return_hidden: bool = False,
                     fused_gather_rope: bool = False, paged=None,
                     lane_valid=None, return_stats: bool = False,
-                    attn_backend=None):
+                    attn_backend=None, packed=None):
         """tokens (B,T), pos (B,) -> (logits (B,T,V), new states).
 
         T == 1 with ``n_valid=None`` is the classic decode step. Passing
@@ -95,12 +95,16 @@ class Model:
         ``attn_backend`` (name or ``attn_backend.AttnBackend``; None =
         reference) picks the attend implementation for every attention
         layer — 'pallas' reads paged KV in place and batches chunk lanes.
+        ``packed`` (an ``attention.PackedLayout``) runs the segment-packed
+        prefill path: ``tokens`` is a bin-packed (R,T) grid holding one
+        segment per slot, token-wise compute runs on the packed grid, and
+        mixers see per-slot gathers (see transformer.lm_decode_step).
         """
         c = self.cfg
         from repro.models.attn_backend import get_backend
         attn_backend = get_backend(attn_backend)
         if c.arch_class == 'audio':
-            assert n_valid is None and paged is None, \
+            assert n_valid is None and paged is None and packed is None, \
                 'audio decode is one token per step, dense cache only'
             if attn_backend.name != 'reference':
                 raise ValueError('audio enc-dec decode supports only the '
@@ -118,7 +122,7 @@ class Model:
                                 fused_gather_rope=fused_gather_rope,
                                 paged=paged, lane_valid=lane_valid,
                                 return_stats=return_stats,
-                                attn_backend=attn_backend)
+                                attn_backend=attn_backend, packed=packed)
 
     # ------------------------------------------------------------- states
     def make_states(self, batch: int, seq_len: int, dtype=jnp.bfloat16,

@@ -336,7 +336,7 @@ def backbone_decode(params, h: jax.Array, states: Dict, pos: jax.Array,
                     rules=None, n_valid: Optional[jax.Array] = None,
                     rope_applied: bool = False, paged=None,
                     lane_valid: Optional[jax.Array] = None,
-                    attn_backend=None
+                    attn_backend=None, packed=None
                     ) -> Tuple[jax.Array, Dict, jax.Array]:
     """``n_valid is None``: classic one-token step (h is (B,1,d)).
     With ``n_valid`` (B,): chunked step — h is (B,T,d); attention layers
@@ -346,11 +346,15 @@ def backbone_decode(params, h: jax.Array, states: Dict, pos: jax.Array,
     addressing; ``lane_valid`` masks dead slots out of MoE routing in the
     one-token step; ``attn_backend`` (an ``attn_backend.AttnBackend``;
     None = reference) picks the attend implementation for every attention
-    layer in the stack. Returns (h, states, moe_dropped_token_slots).
+    layer in the stack; ``packed`` (an ``attention.PackedLayout``) runs
+    the segment-packed chunk layout — ``h`` is bin-packed (R, T, d) while
+    ``pos`` / ``n_valid`` / ``states`` stay slot-major (see
+    ``blocks.block_decode``). Returns (h, states,
+    moe_dropped_token_slots).
     """
     plan = layer_plan(cfg)
     kw = dict(n_valid=n_valid, paged=paged, lane_valid=lane_valid,
-              backend=attn_backend)
+              backend=attn_backend, packed=packed)
     drops = jnp.zeros((), jnp.int32)
     new_states: Dict[str, Any] = {}
     h, st, d0 = block_decode(params['layer0'], h, states['layer0'], pos, cfg,
@@ -418,7 +422,7 @@ def lm_decode_step(params, tokens: jax.Array, states: Dict, pos: jax.Array,
                    fused_gather_rope: bool = False, paged=None,
                    lane_valid: Optional[jax.Array] = None,
                    return_stats: bool = False,
-                   attn_backend=None) -> Tuple[jax.Array, Dict]:
+                   attn_backend=None, packed=None) -> Tuple[jax.Array, Dict]:
     """tokens (B,T), pos (B,) -> (logits (B,T,V), new states).
 
     ``n_valid is None`` is the classic one-token step (T == 1). With
@@ -444,8 +448,17 @@ def lm_decode_step(params, tokens: jax.Array, states: Dict, pos: jax.Array,
     appends a stats dict (``moe_drops``) to the return tuple.
     ``attn_backend`` selects the attend implementation (see
     ``repro.models.attn_backend``; None = the bit-identical reference).
+
+    ``packed`` (an ``attention.PackedLayout``; chunked path only) runs the
+    segment-packed prefill layout: ``tokens`` is the bin-packed (R, T)
+    grid, per-lane positions come from ``packed.lane_pos``, and the
+    returned hidden/logit grid is packed — select per-slot rows through
+    ``packed.seg_row`` / ``packed.seg_off``. ``pos`` / ``n_valid`` /
+    ``states`` stay slot-major (S,).
     """
     rope_applied = False
+    if packed is not None:
+        assert n_valid is not None, 'packed prefill runs the chunked path'
     if n_valid is None:
         if precomputed is not None:
             pre0 = precomputed.gather(tokens)
@@ -457,7 +470,11 @@ def lm_decode_step(params, tokens: jax.Array, states: Dict, pos: jax.Array,
                              else None)
     else:
         T = tokens.shape[1]
-        pos_t = pos[:, None].astype(jnp.int32) + jnp.arange(T, dtype=jnp.int32)
+        if packed is not None:
+            pos_t = packed.lane_pos
+        else:
+            pos_t = pos[:, None].astype(jnp.int32) \
+                + jnp.arange(T, dtype=jnp.int32)
         if precomputed is not None:
             if fused_gather_rope:
                 pre0 = _fused_gather_rope_pre0(precomputed, tokens, pos_t, cfg)
@@ -474,7 +491,8 @@ def lm_decode_step(params, tokens: jax.Array, states: Dict, pos: jax.Array,
                                        n_valid=n_valid,
                                        rope_applied=rope_applied,
                                        paged=paged, lane_valid=lane_valid,
-                                       attn_backend=attn_backend)
+                                       attn_backend=attn_backend,
+                                       packed=packed)
     out = h if return_hidden else lm_logits(params, h, cfg)
     if return_stats:
         return out, states, {'moe_drops': drops}

@@ -1,7 +1,8 @@
-from repro.serving.engine import Request, RequestStatus, ServingEngine
+from repro.serving.engine import (Request, RequestStatus, ScoringError,
+                                  ServingEngine)
 from repro.serving.faults import FaultInjector, ScriptedFaults
 from repro.serving.kvpool import PrefixCache
 from repro.serving.sampler import sample_tokens
 
-__all__ = ['Request', 'RequestStatus', 'ServingEngine', 'PrefixCache',
-           'FaultInjector', 'ScriptedFaults', 'sample_tokens']
+__all__ = ['Request', 'RequestStatus', 'ScoringError', 'ServingEngine',
+           'PrefixCache', 'FaultInjector', 'ScriptedFaults', 'sample_tokens']

@@ -47,6 +47,32 @@ cached page copies the shared rows into a private page (copy-on-write).
 MoE routing masks padding and free-slot lanes (they can never displace a
 real token from expert capacity) and ``stats()`` reports the drop counter.
 
+**Segment-packed prefill** (``pack_prefill=True``, prepacking — arXiv
+2404.09529): without packing, a mixed step dispatches the full
+``(max_slots, chunk_size)`` grid and every decode lane or short prefill
+tail wastes most of its row on masked-out lanes. With packing, the
+scheduler bin-packs this step's per-slot segments — each active slot
+contributes one contiguous run of ``n_valid[s]`` lanes, decode singletons
+included — into a compact ``(R, T)`` grid (first-fit decreasing; R rounds
+up to a power of two for bounded retraces and is capped at ``max_slots``).
+Token-wise compute (embedding/table gather, norms, FFN, residuals,
+lm_head) runs on the packed grid; each *mixer* (attention / MLA / mLSTM /
+sLSTM / hybrid) gathers its inputs back to the slot-major ``(S, T)``
+layout and runs the unchanged unpacked code against the unchanged
+per-slot caches and states (``attention.PackedLayout``). Cross-segment
+attention is therefore *structurally impossible* — a slot's queries only
+ever meet that slot's own cache — rather than relying on a per-lane
+segment-id mask, and packed tokens are **bitwise identical** to the
+unpacked chunked path (tests/test_packed_prefill.py). The scheduler's
+saving shows up in ``stats()`` as ``prefill_lane_utilization``
+(= lane_tokens / lanes_dispatched) and as the TTFT win in
+``benchmarks/serving_throughput.py --workload bursty``. MoE configs force
+``pack_prefill`` off: expert capacity is a function of the dispatch
+grid's token count, so shrinking the grid would change routing decisions
+and break bit-identity. Composes with paged KV, prefix caching,
+precomputed tables and fused gather→RoPE (per-lane positions ride in
+``PackedLayout.lane_pos``).
+
 Logits-on-demand (prompt scoring): a request submitted with
 ``return_logits=True`` gets ``prompt_logits`` filled with the all-position
 logits of its prompt — row ``i`` is the next-token distribution after
@@ -136,6 +162,25 @@ class RequestStatus(str, enum.Enum):
 TERMINAL_STATUSES = frozenset({RequestStatus.FINISHED, RequestStatus.FAILED,
                                RequestStatus.CANCELLED})
 
+
+class ScoringError(RuntimeError):
+    """Raised by :meth:`ServingEngine.score` when any scoring request
+    terminates without its prompt logits (stall, deadline, non-finite
+    watchdog, cancellation). ``errors[i]`` is ``None`` for prompts that
+    scored fine and the failure reason string otherwise; ``logits[i]``
+    holds whatever completed (``None`` for the failed prompts) so partial
+    results are recoverable. Callers used to get silent ``None`` entries
+    and crash later indexing into them."""
+
+    def __init__(self, errors, logits):
+        self.errors = errors
+        self.logits = logits
+        bad = [f'prompt {i}: {e}' for i, e in enumerate(errors)
+               if e is not None]
+        n = sum(e is not None for e in errors)
+        super().__init__(f'scoring failed for {n}/{len(errors)} prompts '
+                         f'({"; ".join(bad)})')
+
 # internal (engine-allocated) uids start far below any plausible caller uid
 _INTERNAL_UID_BASE = -(10 ** 12)
 
@@ -189,7 +234,8 @@ class ServingEngine:
                  num_pages: Optional[int] = None,
                  attn_backend: str = 'reference',
                  fault_injector: Optional[FaultInjector] = None,
-                 admit_retry_steps: int = 8):
+                 admit_retry_steps: int = 8,
+                 pack_prefill: bool = False):
         from repro.models.attn_backend import get_backend
         self.model, self.params = model, params
         self.max_slots, self.max_seq = max_slots, max_seq
@@ -228,6 +274,17 @@ class ServingEngine:
         self._meta = getattr(model.cfg, 'num_meta_tokens', 0)
         self.paged = bool(prefix_cache)
         self.page_size = page_size
+        # Segment-packed prefill (see the docstring section): needs a real
+        # chunk grid to pack into, and is gated off for MoE — expert
+        # capacity is derived from the dispatch grid's token count, so
+        # shrinking the grid from (S, T) to (R, T) would change routing
+        # and break the bit-identity contract. Audio never chunks.
+        self.pack_prefill = bool(pack_prefill) and chunk_size > 1 \
+            and model.cfg.arch_class != 'audio' and model.cfg.moe is None
+        # chunk-grid utilization counters (packed-prefill win metric):
+        # lanes dispatched vs lanes that actually carried a token
+        self.lanes_dispatched = 0
+        self.lane_tokens = 0
 
         # --------------------------------------------------- paged geometry
         if self.paged:
@@ -404,6 +461,50 @@ class ServingEngine:
             if want_chunk else None
         self._chunk_step_logits = jax.jit(chunk_step_logits, donate_argnums=1) \
             if want_chunk else None
+
+        def packed_hidden(params, states, tokens, pos, n_valid, packed, key,
+                          temps, pt, rt):
+            # segment-packed prefill: tokens is the bin-packed (R, T) grid,
+            # pos/n_valid/states stay slot-major (S,). Each slot's last
+            # valid hidden lives at lane (seg_row, seg_off + n_valid - 1).
+            h, states, stats = model.decode_step(
+                params, tokens, states, pos, precomputed=precomputed,
+                n_valid=n_valid, return_hidden=True,
+                fused_gather_rope=self.fused_gather_rope,
+                paged=paged_tables(pt, rt), packed=packed, return_stats=True,
+                attn_backend=backend)
+            R, T = tokens.shape
+            flat = h.reshape((R * T,) + h.shape[2:])
+            idx = packed.seg_row * T + packed.seg_off \
+                + jnp.maximum(n_valid - 1, 0)
+            h_last = flat[idx][:, None]                           # (S,1,d)
+            logits = lm_logits(params, h_last, model.cfg)
+            nxt = sample_tokens(logits[:, 0], key, temps)
+            finite = jnp.all(jnp.isfinite(logits), axis=(1, 2))
+            return h, states, nxt, stats['moe_drops'], finite
+
+        def packed_step(params, states, tokens, pos, n_valid, packed, key,
+                        temps, pt=None, rt=None):
+            _, states, nxt, drops, finite = packed_hidden(
+                params, states, tokens, pos, n_valid, packed, key, temps,
+                pt, rt)
+            return states, nxt, drops, finite
+
+        def packed_step_logits(params, states, tokens, pos, n_valid, packed,
+                               key, temps, pt=None, rt=None):
+            # packed scoring: the lm_head on every packed lane — slot s's
+            # prompt logits live at row seg_row[s], cols seg_off[s]..+n_valid
+            h, states, nxt, drops, finite = packed_hidden(
+                params, states, tokens, pos, n_valid, packed, key, temps,
+                pt, rt)
+            return states, nxt, drops, finite, \
+                lm_logits(params, h, model.cfg)
+
+        self._packed_step = jax.jit(packed_step, donate_argnums=1) \
+            if self.pack_prefill else None
+        self._packed_step_logits = \
+            jax.jit(packed_step_logits, donate_argnums=1) \
+            if self.pack_prefill else None
 
         mask = self._paged_mask
 
@@ -956,6 +1057,58 @@ class ServingEngine:
         """Index of the next prompt token this slot will consume."""
         return int(self.slot_pos[slot]) - self._meta
 
+    def _pack_layout(self, tokens: np.ndarray, n_valid: np.ndarray):
+        """Bin-pack this step's per-slot segments into a compact (R, T)
+        grid: first-fit decreasing over the active slots (each contributes
+        ONE contiguous segment of ``n_valid[s]`` lanes, never split across
+        rows). R is rounded up to the next power of two (bounded jit
+        retraces: at most log2(max_slots)+1 packed grid shapes) and capped
+        at ``max_slots`` — the worst case packs exactly like the unpacked
+        grid. Returns ``(ptoks, layout, seg_row, seg_off)``; the numpy
+        ``seg_row``/``seg_off`` locate slot ``s``'s scoring logits at
+        ``logits[seg_row[s], seg_off[s] : seg_off[s] + n_valid[s]]``.
+        """
+        S, T = tokens.shape
+        order = sorted((s for s in range(S) if n_valid[s] > 0),
+                       key=lambda s: (-int(n_valid[s]), s))
+        seg_row = np.zeros(S, np.int32)
+        seg_off = np.zeros(S, np.int32)
+        space: List[int] = []              # free lanes per packed row
+        for s in order:
+            ln = int(n_valid[s])
+            for r, free in enumerate(space):
+                if free >= ln:
+                    seg_row[s], seg_off[s] = r, T - free
+                    space[r] = free - ln
+                    break
+            else:
+                seg_row[s], seg_off[s] = len(space), 0
+                space.append(T - ln)
+        R = 1
+        while R < max(1, len(space)):
+            R *= 2
+        R = min(R, S)
+        ptoks = np.zeros((R, T), np.int32)
+        lane_slot = np.zeros((R, T), np.int32)
+        lane_local = np.zeros((R, T), np.int32)
+        lane_pos = np.zeros((R, T), np.int32)
+        lane_valid = np.zeros((R, T), bool)
+        for s in order:
+            ln = int(n_valid[s])
+            r, o = int(seg_row[s]), int(seg_off[s])
+            ptoks[r, o:o + ln] = tokens[s, :ln]
+            lane_slot[r, o:o + ln] = s
+            lane_local[r, o:o + ln] = np.arange(ln)
+            lane_pos[r, o:o + ln] = int(self.slot_pos[s]) + np.arange(ln)
+            lane_valid[r, o:o + ln] = True
+        layout = A.PackedLayout(
+            seg_row=jnp.asarray(seg_row), seg_off=jnp.asarray(seg_off),
+            lane_slot=jnp.asarray(lane_slot),
+            lane_local=jnp.asarray(lane_local),
+            lane_pos=jnp.asarray(lane_pos),
+            lane_valid=jnp.asarray(lane_valid))
+        return ptoks, layout, seg_row, seg_off
+
     def step_once(self) -> None:
         self.ticks += 1
         if self.fault_injector is not None:
@@ -980,6 +1133,7 @@ class ServingEngine:
         self.key, sub = jax.random.split(self.key)
 
         logits = None
+        pk_row = pk_off = None
         if prefilling or self.paged:
             # paged mode always runs the chunk-shaped program: its T == 1
             # case is bit-identical to the single-token step, and the page
@@ -1019,19 +1173,50 @@ class ServingEngine:
                       if self.slot_req[s] is not None and n_valid[s] > 0]
             if not active:
                 return            # everything was preempted this step
+            # _ensure_blocks may have preempted the slots that justified the
+            # expensive program choices above — recompute from the surviving
+            # lanes: a step whose only scoring slot was preempted must NOT
+            # run the logits-returning program, and a step whose prefill
+            # slots were all preempted narrows back to the T == 1 grid
+            # (bit-identical: the chunk path's T == 1 case IS the decode
+            # step, and every surviving lane has n_valid == 1).
+            want_logits = any(
+                self.slot_req[s].return_logits
+                and self._progress(s) < len(self.slot_stream[s])
+                for s in active)
+            if prefilling and max(int(n_valid[s]) for s in active) <= 1:
+                prefilling = False
+                tokens = tokens[:, :1]
             temps = jnp.asarray([
                 (self.slot_req[s].temperature if self.slot_req[s] else 0.0)
                 for s in range(self.max_slots)], jnp.float32)
             pos = jnp.asarray(self.slot_pos.astype(np.int32))
-            args = [self.params, self.states, jnp.asarray(tokens), pos,
-                    jnp.asarray(n_valid), sub, temps]
-            if self.paged:
-                args += [jnp.asarray(self._pt), jnp.asarray(self._rt)]
-            if want_logits:
-                self.states, nxt, drops, finite, logits = \
-                    self._chunk_step_logits(*args)
+            if self.pack_prefill and prefilling:
+                ptoks, playout, pk_row, pk_off = \
+                    self._pack_layout(tokens, n_valid)
+                self.lanes_dispatched += int(ptoks.size)
+                self.lane_tokens += int(n_valid.sum())
+                args = [self.params, self.states, jnp.asarray(ptoks), pos,
+                        jnp.asarray(n_valid), playout, sub, temps]
+                if self.paged:
+                    args += [jnp.asarray(self._pt), jnp.asarray(self._rt)]
+                if want_logits:
+                    self.states, nxt, drops, finite, logits = \
+                        self._packed_step_logits(*args)
+                else:
+                    self.states, nxt, drops, finite = self._packed_step(*args)
             else:
-                self.states, nxt, drops, finite = self._chunk_step(*args)
+                self.lanes_dispatched += int(tokens.size)
+                self.lane_tokens += int(n_valid.sum())
+                args = [self.params, self.states, jnp.asarray(tokens), pos,
+                        jnp.asarray(n_valid), sub, temps]
+                if self.paged:
+                    args += [jnp.asarray(self._pt), jnp.asarray(self._rt)]
+                if want_logits:
+                    self.states, nxt, drops, finite, logits = \
+                        self._chunk_step_logits(*args)
+                else:
+                    self.states, nxt, drops, finite = self._chunk_step(*args)
             consumed = n_valid
         else:
             temps = jnp.asarray([
@@ -1081,8 +1266,15 @@ class ServingEngine:
             if req.return_logits and p_before < len(stream):
                 # lanes 0..consumed-1 hold logits for stream[p_before..p-1];
                 # copy so the slice doesn't pin the whole step's (B,T,V)
-                # array in memory for the rest of the prefill
-                req._logit_chunks.append(logits[s, :int(consumed[s])].copy())
+                # array in memory for the rest of the prefill. In a packed
+                # dispatch the slot's lanes sit at (pk_row[s], pk_off[s]..).
+                if pk_row is not None:
+                    row, off = int(pk_row[s]), int(pk_off[s])
+                    req._logit_chunks.append(
+                        logits[row, off:off + int(consumed[s])].copy())
+                else:
+                    req._logit_chunks.append(
+                        logits[s, :int(consumed[s])].copy())
                 if p >= len(stream):
                     req.prompt_logits = np.concatenate(req._logit_chunks, 0)
                     req._logit_chunks = []
@@ -1143,6 +1335,11 @@ class ServingEngine:
         required), even in a prefix-cached engine. Internal uids come from
         a private counter so they can never collide with caller-chosen uids
         live in the same engine.
+
+        A prompt whose request terminates without logits (stall, deadline,
+        NaN/Inf watchdog, ...) raises :class:`ScoringError` — per-prompt
+        reasons in ``.errors``, partial results in ``.logits`` — instead of
+        silently returning ``None`` entries for callers to trip over.
         """
         reqs = [Request(uid=self._next_internal_uid(),
                         prompt=np.asarray(p, np.int32),
@@ -1151,6 +1348,12 @@ class ServingEngine:
         for r in reqs:
             self.submit(r)
         self.run()
+        if any(r.status is not RequestStatus.FINISHED
+               or r.prompt_logits is None for r in reqs):
+            errors = [None if (r.status is RequestStatus.FINISHED
+                               and r.prompt_logits is not None)
+                      else (r.error or r.status.value) for r in reqs]
+            raise ScoringError(errors, [r.prompt_logits for r in reqs])
         return [r.prompt_logits for r in reqs]
 
     # ------------------------------------------------------------- metrics
@@ -1168,6 +1371,12 @@ class ServingEngine:
             'mean_ttft_s': float(np.mean(ttft)) if ttft else 0.0,
             'engine_steps': self.steps,
             'moe_token_drops': self.moe_token_drops,
+            # chunk-grid utilization (segment-packed prefill win metric)
+            'lanes_dispatched': self.lanes_dispatched,
+            'lane_tokens': self.lane_tokens,
+            'prefill_lane_utilization':
+                self.lane_tokens / self.lanes_dispatched
+                if self.lanes_dispatched else 0.0,
             # failure-semantics counters (engine lifetime totals)
             'preemptions': self.preemptions,
             'failed': self.n_failed,

@@ -10,8 +10,13 @@ def sample_tokens(logits: jax.Array, key: jax.Array,
     """logits (B,V); temperature (B,) — 0 means greedy for that row."""
     lf = logits.astype(jnp.float32)
     if top_k:
-        kth = jnp.sort(lf, axis=-1)[:, -top_k][:, None]
-        lf = jnp.where(lf < kth, -jnp.inf, lf)
+        # Clamp k to the vocab size (k > V would be an out-of-range index)
+        # and keep exactly k candidates even when the kth logit is tied —
+        # a threshold compare (lf < kth) would keep every tied candidate.
+        k = min(int(top_k), lf.shape[-1])
+        vals, idx = jax.lax.top_k(lf, k)
+        rows = jnp.arange(lf.shape[0], dtype=jnp.int32)[:, None]
+        lf = jnp.full_like(lf, -jnp.inf).at[rows, idx].set(vals)
     greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
     temp = jnp.maximum(temperature, 1e-6)[:, None]
     sampled = jax.random.categorical(key, lf / temp, axis=-1).astype(jnp.int32)

@@ -59,6 +59,7 @@ def _fill_positions(NP, ps, table, lengths, Sc):
     return jnp.asarray(cpos)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize('ps', [8, 16])
 @pytest.mark.parametrize('window', [0, 5])
 @pytest.mark.parametrize('quant', [False, True])

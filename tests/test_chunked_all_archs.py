@@ -78,6 +78,7 @@ def chunked(model, params, toks, states, pre, meta, chunk):
     return jnp.concatenate(logits, 1), states
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize('arch', ARCHS)
 def test_chunked_bit_identical_matrix(arch):
     """Chunked == token-by-token, bitwise: logits at every prompt position

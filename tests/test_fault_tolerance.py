@@ -27,7 +27,8 @@ import pytest
 from _hypothesis_compat import given, settings, st
 from repro.config import MLAConfig, ModelConfig, SSMConfig
 from repro.models.model import Model
-from repro.serving import Request, ScriptedFaults, ServingEngine
+from repro.serving import (Request, ScoringError, ScriptedFaults,
+                           ServingEngine)
 from repro.serving.engine import RequestStatus
 
 PS = 8
@@ -222,6 +223,84 @@ def test_nan_watchdog_fails_only_offending_lane():
     assert reqs[0].error == 'nonfinite_logits'
     assert reqs[1].status is RequestStatus.FINISHED
     assert list(reqs[1].generated) == ref[1]
+
+
+@pytest.mark.chaos
+def test_score_surfaces_failed_prompt_as_scoring_error():
+    """score() used to return silent ``None`` entries when a scoring
+    request terminated FAILED (callers crashed later indexing into them).
+    Poison a scoring lane via the injector: score() must raise
+    ScoringError carrying the per-prompt reason and the partial results."""
+    model, params = _build('gqa')
+    faults = ScriptedFaults(nan_lanes={0: [0]})     # first dispatch, slot 0
+    eng = ServingEngine(model, params, max_slots=2, max_seq=MAX_SEQ,
+                        chunk_size=4, fault_injector=faults)
+    p = _prompts(2)
+    with pytest.raises(ScoringError) as ei:
+        eng.score([p[0], p[1]])
+    err = ei.value
+    assert err.errors[0] == 'nonfinite_logits'
+    assert err.errors[1] is None
+    assert err.logits[0] is None
+    assert err.logits[1].shape == (len(p[1]), 211)
+    assert np.isfinite(err.logits[1]).all()
+    assert 'nonfinite_logits' in str(err)
+
+
+@pytest.mark.chaos
+def test_preempted_scoring_slot_reverts_to_fast_program():
+    """Regression (step_once program selection): ``want_logits`` and
+    ``prefilling`` were computed before ``_ensure_blocks`` preemption
+    filtering, so a step whose only scoring slot had just been preempted
+    still ran the slower logits-returning program over the surviving
+    decode lanes. They are recomputed after the lane filter now."""
+    model, params = _build('gqa')
+    eng = _paged('gqa', num_pages=24)
+    p = _prompts(2)
+    # the decoder admits first -> oldest in flight -> preemption-protected
+    decoder = Request(uid=0, prompt=p[0][:4], max_new_tokens=20)
+    eng.submit(decoder)
+    for _ in range(100):
+        if decoder.status is RequestStatus.DECODING:
+            break
+        eng.step_once()
+    assert decoder.status is RequestStatus.DECODING
+    scorer = Request(uid=1, prompt=p[1], max_new_tokens=1,
+                     return_logits=True)
+    eng.submit(scorer)
+    eng.step_once()                    # scorer admitted + first chunk (0..4)
+    eng.step_once()                    # second chunk (4..8), page 1 full
+    assert scorer.status is RequestStatus.PREFILLING
+    assert eng._progress(1) == 8       # next chunk must allocate page 2
+    # drain the free pool: the scorer's _ensure_blocks fails, the decoder
+    # (protected, and with page headroom this step) survives
+    stolen = []
+    while (got := eng.kv.alloc(1)) is not None:
+        stolen.extend(got)
+    calls = {'logits': 0, 'fast': 0}
+    orig_l, orig_f = eng._chunk_step_logits, eng._chunk_step
+
+    def spy_l(*a):
+        calls['logits'] += 1
+        return orig_l(*a)
+
+    def spy_f(*a):
+        calls['fast'] += 1
+        return orig_f(*a)
+
+    eng._chunk_step_logits, eng._chunk_step = spy_l, spy_f
+    eng.step_once()
+    eng._chunk_step_logits, eng._chunk_step = orig_l, orig_f
+    assert scorer.status is RequestStatus.PREEMPTED
+    assert calls == {'logits': 0, 'fast': 1}, \
+        'the step after the scoring slot was preempted must run the ' \
+        f'narrow program, got {calls}'
+    # restore the pool: both requests must still complete correctly
+    eng.kv.free(stolen)
+    eng.run()
+    assert decoder.status is RequestStatus.FINISHED
+    assert scorer.status is RequestStatus.FINISHED
+    assert scorer.prompt_logits.shape == (len(p[1]), 211)
 
 
 # ------------------------------------------------------------- preemption

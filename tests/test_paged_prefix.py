@@ -76,6 +76,7 @@ def _prefix(cfg, n=24, seed=99):
     return np.random.default_rng(seed).integers(3, cfg.vocab_size, size=n)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize('kind,quant', [
     ('gqa', False), ('gqa', True), ('local', False),
     ('mla_moe', False), ('hybrid', False),

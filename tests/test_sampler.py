@@ -1,0 +1,85 @@
+"""Top-k sampling unit tests.
+
+The old implementation thresholded against the kth-largest logit
+(``jnp.sort(lf)[:, -top_k]``): it raised an out-of-range error whenever
+``top_k > vocab_size`` and, on ties AT the kth logit, kept every tied
+candidate — more than k — skewing the truncated distribution. The fix
+clamps k and keeps exactly k candidates via ``jax.lax.top_k``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.sampler import sample_tokens
+
+V = 5
+
+
+def _logits(rows):
+    return jnp.asarray(rows, jnp.float32)
+
+
+def _draws(logits, top_k, n=200, temperature=1.0):
+    temps = jnp.full((logits.shape[0],), temperature, jnp.float32)
+    out = []
+    for i in range(n):
+        out.append(np.asarray(sample_tokens(logits, jax.random.PRNGKey(i),
+                                            temps, top_k=top_k)))
+    return np.stack(out)                            # (n, B)
+
+
+def test_top_k_keeps_exactly_k_on_ties():
+    """Ties at the kth logit: [0,1,1,1,2] with k=2 must keep the argmax
+    (4) plus exactly ONE of the tied 1s — the old threshold kept all
+    three, sampling from a 4-candidate pool."""
+    lg = _logits([[0.0, 1.0, 1.0, 1.0, 2.0]])
+    draws = _draws(lg, top_k=2)
+    seen = set(draws.ravel().tolist())
+    assert len(seen) == 2, f'kept {seen}: top-2 must be a 2-candidate pool'
+    assert 4 in seen
+    assert seen - {4} <= {1, 2, 3}                  # the surviving tied lane
+
+
+def test_top_k_larger_than_vocab_is_clamped():
+    """k >= V used to raise (index -k out of range); now it clamps to V
+    and is equivalent to unrestricted sampling."""
+    lg = _logits([[0.1, 0.4, 0.2, 0.3, 0.0], [2.0, -1.0, 0.5, 0.0, 1.0]])
+    temps = jnp.ones((2,), jnp.float32)
+    for k in (V, V + 1, V + 100):
+        got = sample_tokens(lg, jax.random.PRNGKey(7), temps, top_k=k)
+        want = sample_tokens(lg, jax.random.PRNGKey(7), temps, top_k=0)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_top_k_one_equals_greedy():
+    """k=1 at temperature 1.0 collapses to greedy — only the argmax
+    survives the mask."""
+    lg = _logits([[0.1, 0.9, 0.3, 0.2, 0.0], [5.0, 1.0, 2.0, 3.0, 4.0]])
+    draws = _draws(lg, top_k=1, n=50)
+    np.testing.assert_array_equal(draws, np.broadcast_to([1, 0], draws.shape))
+
+
+def test_top_k_zero_disables_truncation():
+    """top_k=0 (the default) must leave logits untouched: every candidate
+    with finite mass appears across enough draws."""
+    lg = _logits([[1.0, 1.0, 1.0, 1.0, 1.0]])
+    draws = _draws(lg, top_k=0, n=300)
+    assert set(draws.ravel().tolist()) == set(range(V))
+
+
+def test_top_k_respects_greedy_rows():
+    """temperature <= 0 rows stay greedy regardless of top_k."""
+    lg = _logits([[0.0, 3.0, 1.0, 2.0, -1.0]])
+    temps = jnp.zeros((1,), jnp.float32)
+    for k in (1, 3, V + 2):
+        got = sample_tokens(lg, jax.random.PRNGKey(0), temps, top_k=k)
+        assert int(got[0]) == 1
+
+
+def test_top_k_masks_low_logits():
+    """Candidates below the top-k are impossible, not merely unlikely:
+    with k=2 over well-separated logits only the two largest ever
+    appear."""
+    lg = _logits([[0.0, 10.0, 5.0, -3.0, 9.0]])
+    draws = _draws(lg, top_k=2, n=200)
+    assert set(draws.ravel().tolist()) <= {1, 4}
