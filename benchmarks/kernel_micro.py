@@ -91,4 +91,56 @@ def bench_kernels() -> List[Tuple[str, float, str]]:
     rows.append(('kernel/paged_attend_gather_us', t_gather,
                  f'gather dense view + attend oracle, in-place speedup='
                  f'{t_gather / max(t_inplace, 1e-9):.2f}x'))
+
+    # fused paged maintenance (job-list page writes: chunk scatter +
+    # deferred clear-on-alloc in one pass per leaf) vs the XLA flat-index
+    # scatter preceded by a standalone clear dispatch it replaces. Same
+    # pool as the attend rows; one wrapping slot, one fresh slot, one page
+    # pending clear-on-alloc. Outputs are bitwise identical by contract
+    # (tests/test_attn_backend.py), so this row is pure write-path cost.
+    from repro.kernels import paged_maintenance as PM
+    from repro.models.attention import paged_scatter
+    cache = {'k': kp, 'v': vp, 'pos': cpos}
+    Sc, Tc = P * ps, 8
+    upd = {'k': jax.random.normal(jax.random.fold_in(kk, 3), (B, Tc, KV, d)),
+           'v': jax.random.normal(jax.random.fold_in(kk, 4), (B, Tc, KV, d))}
+    wpos0 = jnp.array([Sc - 3, 0], jnp.int32)       # ring wrap + cold start
+    nvw = jnp.array([Tc, Tc - 1], jnp.int32)
+    pend = jnp.array([int(tbl[1, 0]), NP - 1, 0, 0], jnp.int32)
+    t_sc_fused = _t(jax.jit(lambda c, u, p, n, t, pd:
+                            PM.fused_chunk_scatter(c, u, p, n, t, Sc, pd)),
+                    cache, upd, wpos0, nvw, tbl, pend)
+
+    def xla_write(c, u, p, n, t, pd):
+        # the reference path: eager clear dispatch, then flat-index scatter
+        c = {nm: leaf.at[pd].set(PM.leaf_fill(nm)) for nm, leaf in c.items()}
+        return paged_scatter(c, u, p, n, t, Sc)
+    t_sc_xla = _t(jax.jit(xla_write), cache, upd, wpos0, nvw, tbl, pend)
+    rows.append(('kernel/paged_scatter_fused_us', t_sc_fused,
+                 f'Pallas job-list write+clear, B={B} T={Tc} chunk, '
+                 f'{len(cache)} leaves '
+                 f'({"interpret" if jax.default_backend() != "tpu" else "compiled"})'))
+    rows.append(('kernel/paged_scatter_xla_us', t_sc_xla,
+                 f'XLA clear + flat-index scatter, fused speedup='
+                 f'{t_sc_xla / max(t_sc_fused, 1e-9):.2f}x'))
+
+    # copy-on-write: page-to-page DMA kernel (src page in, dst page out,
+    # tail rows filled in the same pass) vs the XLA gather+mask+scatter
+    # copy the engine used to dispatch at admission.
+    sdr = jnp.array([[1, 2, 3], [4, 6, ps]], jnp.int32)
+    t_cow_dma = _t(jax.jit(lambda pool, s: PM.cow_page_copy(pool, s)),
+                   kp, sdr)
+
+    def cow_gather(pool, s):
+        srcp = pool[s[:, 0]]                         # (NJ, ps, ...)
+        keep = (jnp.arange(ps)[None, :] < s[:, 2][:, None]) \
+            .reshape(s.shape[0], ps, *(1,) * (pool.ndim - 2))
+        return pool.at[s[:, 1]].set(jnp.where(keep, srcp, 0))
+    t_cow_xla = _t(jax.jit(cow_gather), kp, sdr)
+    rows.append(('kernel/cow_dma_us', t_cow_dma,
+                 f'Pallas page-to-page COW DMA, {sdr.shape[0]} pages '
+                 f'({"interpret" if jax.default_backend() != "tpu" else "compiled"})'))
+    rows.append(('kernel/cow_gather_us', t_cow_xla,
+                 f'XLA gather+mask copy, DMA speedup='
+                 f'{t_cow_xla / max(t_cow_dma, 1e-9):.2f}x'))
     return rows

@@ -25,6 +25,10 @@ Three workloads:
   requests — the engine must finish 100% of valid requests via preemption,
   bit-identical to an unfaulted dense run, isolating every failure to its
   own request.
+- **pallas-compiled** (compiled paged fast-path target): per-step latency
+  of the paged engine under ``attn_backend='reference'`` vs ``'pallas'``
+  (in-place attend + fused in-kernel maintenance) on the prompt-heavy and
+  shared-prefix workloads, tokens asserted identical across backends.
 
 Each workload merges its section into ``BENCH_serving.json`` (repo root)
 so the perf trajectory is machine-readable across PRs:
@@ -413,6 +417,104 @@ def bench_overload(n_req: int = 8, prompt_len: int = 40,
     ]
 
 
+def bench_pallas_compiled(prompt_len: int = 96, tail_len: int = 8,
+                          new_tokens: int = 8, chunk_size: int = 32,
+                          n_req: int = 6, page_size: int = 16,
+                          n_layers: int = 4, repeats: int = 3,
+                          write_json: bool = True
+                          ) -> List[Tuple[str, float, str]]:
+    """Paged-engine per-step latency: reference backend vs pallas backend.
+
+    The reference backend gathers a dense view and scatters chunk writes
+    through XLA; the pallas backend reads pages in place and runs all page
+    maintenance (chunk scatter, clear-on-alloc, COW) as in-kernel job
+    lists. Two workloads: **prompt-heavy** cold chunked prefill and
+    **shared-prefix** cache hits (prefix pages attach, only tails
+    prefill). Tokens are asserted identical across backends — the bench
+    doubles as an end-to-end check of the backend parity contract. On CPU
+    the pallas kernels run in interpret mode, so only a TPU run's speedup
+    is hardware-meaningful; the CPU row still tracks dispatch-count and
+    correctness across PRs.
+    """
+    model, params = _bench_model(n_layers)
+    max_seq = 256
+    mode = 'interpret' if jax.default_backend() != 'tpu' else 'compiled'
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(3, 2000, size=prompt_len)
+
+    def mk_prompt_heavy():
+        r = np.random.default_rng(1)
+        return [Request(uid=i,
+                        prompt=r.integers(3, 2000, size=prompt_len + i % 3),
+                        max_new_tokens=new_tokens) for i in range(n_req)]
+
+    def mk_shared():
+        return [Request(uid=i,
+                        prompt=np.concatenate([
+                            prefix,
+                            np.random.default_rng(100 + i).integers(
+                                3, 2000, size=tail_len)]),
+                        max_new_tokens=new_tokens) for i in range(n_req)]
+
+    rows: List[Tuple[str, float, str]] = []
+    payload: Dict[str, Dict] = {
+        'workload': {'prompt_len': prompt_len, 'tail_len': tail_len,
+                     'new_tokens': new_tokens, 'n_req': n_req,
+                     'chunk_size': chunk_size, 'page_size': page_size,
+                     'repeats': repeats, 'mode': mode,
+                     'model': f'{n_layers}L d=256 fp32 CPU'}}
+    for wname, mk in (('prompt_heavy', mk_prompt_heavy),
+                      ('shared_prefix', mk_shared)):
+        res: Dict[str, Dict] = {}
+        toks: Dict[str, list] = {}
+        for backend in ('reference', 'pallas'):
+            eng = ServingEngine(model, params, max_slots=4, max_seq=max_seq,
+                                chunk_size=chunk_size, prefix_cache=True,
+                                page_size=page_size, attn_backend=backend)
+            warm = mk()          # warms the jits AND the prefix cache
+            for r in warm:
+                eng.submit(r)
+            eng.run()
+            passes = []
+            for _ in range(max(1, repeats)):
+                reqs = mk()
+                steps0 = eng.steps
+                t0 = time.perf_counter()
+                for r in reqs:
+                    eng.submit(r)
+                eng.run()
+                dt = time.perf_counter() - t0
+                steps = max(eng.steps - steps0, 1)
+                st = eng.stats(reqs)
+                passes.append({'total_s': dt, 'engine_steps': steps,
+                               'us_per_step': dt / steps * 1e6,
+                               'mean_ttft_s': st['mean_ttft_s'],
+                               'reqs': reqs})
+            med = sorted(passes,
+                         key=lambda p: p['total_s'])[(len(passes) - 1) // 2]
+            toks[backend] = [r.generated for r in med['reqs']]
+            res[backend] = {k: v for k, v in med.items() if k != 'reqs'}
+        assert toks['reference'] == toks['pallas'], \
+            f'{wname}: pallas backend tokens diverged from reference'
+        res['step_speedup'] = (res['reference']['us_per_step']
+                               / max(res['pallas']['us_per_step'], 1e-9))
+        res['bit_identical'] = True                  # asserted above
+        payload[wname] = res
+        rows += [
+            (f'serving/pallas_{wname}_ref_us_per_step',
+             res['reference']['us_per_step'],
+             f'reference backend (XLA gather+scatter), '
+             f"{res['reference']['engine_steps']} steps"),
+            (f'serving/pallas_{wname}_pallas_us_per_step',
+             res['pallas']['us_per_step'],
+             f"pallas backend ({mode}) speedup="
+             f"{res['step_speedup']:.2f}x, tokens bit-identical"),
+        ]
+    if write_json:
+        _merge_json('pallas_compiled', payload)
+    return rows
+
+
 def bench_bursty(n_req: int = 12, prefix_pool: int = 4,
                  prefix_len: int = 12, new_tokens: int = 4,
                  chunk_size: int = 16, page_size: int = 16,
@@ -539,7 +641,8 @@ if __name__ == '__main__':
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument('--workload', default='prompt-heavy',
                     choices=['prompt-heavy', 'shared-prefix',
-                             'recurrent-mla', 'overload', 'bursty'])
+                             'recurrent-mla', 'overload', 'bursty',
+                             'pallas-compiled'])
     ap.add_argument('--smoke', action='store_true',
                     help='small CI workload: 2 layers, short prompts — '
                          'tracks the TTFT trajectory across PRs without '
@@ -567,6 +670,14 @@ if __name__ == '__main__':
                                 n_layers=2, repeats=2)
         else:
             rows = bench_bursty()
+    elif args.workload == 'pallas-compiled':
+        if args.smoke:
+            rows = bench_pallas_compiled(prompt_len=32, tail_len=6,
+                                         new_tokens=4, chunk_size=16,
+                                         n_req=3, page_size=8, n_layers=2,
+                                         repeats=2)
+        else:
+            rows = bench_pallas_compiled()
     elif args.workload == 'overload':
         if args.smoke:
             rows = bench_overload(n_req=6, prompt_len=24, new_tokens=8,

@@ -31,7 +31,7 @@ __all__ = ['decode_attention', 'page_validity', 'NEG_INF']
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      cache_pos: jax.Array, pos: jax.Array, *,
                      window: int = 0, block_s: int = 128,
-                     interpret: bool = True) -> jax.Array:
+                     interpret: bool | None = None) -> jax.Array:
     """q (B,H,d); k/v_cache (B,Sc,KH,d); cache_pos (B,Sc); pos (B,)
     -> (B,H,d). Sc % block_s == 0 (ops pads with pos=-1 slots)."""
     B, H, d = q.shape

@@ -28,9 +28,12 @@ def _gather_kernel(ids_ref, table_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=('interpret',))
 def embed_gather(table: jax.Array, ids: jax.Array, *,
-                 interpret: bool = True) -> jax.Array:
+                 interpret: bool | None = None) -> jax.Array:
     """table (V, W), ids (N,) int32 -> rows (N, W). W must be 128-aligned
     (use ops.embed_gather_rows for the padding wrapper)."""
+    if interpret is None:
+        from repro.kernels.ops import _interpret
+        interpret = _interpret()
     V, W = table.shape
     N = ids.shape[0]
 

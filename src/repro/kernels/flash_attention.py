@@ -80,8 +80,11 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int = 0,
                     block_q: int = 128, block_k: int = 128,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool | None = None) -> jax.Array:
     """q (B,S,H,d); k,v (B,S,KH,d) -> (B,S,H,d). S % block == 0 (ops pads)."""
+    if interpret is None:
+        from repro.kernels.ops import _interpret
+        interpret = _interpret()
     B, S, H, d = q.shape
     KH = k.shape[2]
     G = H // KH

@@ -58,10 +58,14 @@ def _gather_rope_kernel(ids_ref, pos_ref, table_ref, out_ref, *, segs, theta):
 
 @functools.partial(jax.jit, static_argnames=('segs', 'theta', 'interpret'))
 def gather_rope(table: jax.Array, ids: jax.Array, positions: jax.Array, *,
-                segs, theta: float, interpret: bool = True) -> jax.Array:
+                segs, theta: float,
+                interpret: bool | None = None) -> jax.Array:
     """table (V, W), ids (N,) int32, positions (N,) int32 -> rows (N, W)
     with each ``segs`` slice RoPE-rotated for its token's position. W must be
     128-aligned (use ops.gather_rope_rows for the padding wrapper)."""
+    if interpret is None:
+        from repro.kernels.ops import _interpret
+        interpret = _interpret()
     V, W = table.shape
     N = ids.shape[0]
     segs = tuple(sorted(segs))

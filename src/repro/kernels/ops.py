@@ -22,6 +22,12 @@ from repro.kernels.paged_attention import paged_attention
 
 
 def _interpret() -> bool:
+    """Single platform check for every Pallas entry point.
+
+    Kernels compile on TPU and run interpreted elsewhere (CPU CI validates
+    the kernel bodies in Python). Every kernel's ``interpret=None`` default
+    resolves here, so no caller silently runs interpreted on real hardware.
+    """
     return jax.default_backend() != 'tpu'
 
 
@@ -54,13 +60,28 @@ def gather_rope_rows(table: jax.Array, ids: jax.Array, positions: jax.Array,
     whose q and k segments are already rotated for each token's position —
     the chunked-prefill serving fast path's first read.
     """
+    segs = ((q_off, num_heads, head_dim), (k_off, num_kv_heads, head_dim))
+    return gather_rope_rows_segs(table, ids, positions, segs=segs,
+                                 theta=theta)
+
+
+def gather_rope_rows_segs(table: jax.Array, ids: jax.Array,
+                          positions: jax.Array, *, segs,
+                          theta: float) -> jax.Array:
+    """Fused row gather + RoPE over arbitrary static segments.
+
+    ``segs`` is ``((offset, n_heads, head_dim), ...)`` in row-storage order;
+    each segment is half-split-rotated for its token's position. This is the
+    generic form behind :func:`gather_rope_rows`; MLA layouts use it with
+    per-head rotary-slice segments (``[qk_nope | qk_rope]`` interleaving
+    plus the shared ``k_pe`` slice).
+    """
     W = table.shape[1]
     tp = _pad_to(table, 128, axis=1)
     flat_ids = ids.reshape(-1).astype(jnp.int32)
     flat_pos = positions.reshape(-1).astype(jnp.int32)
-    segs = ((q_off, num_heads, head_dim), (k_off, num_kv_heads, head_dim))
-    rows = gather_rope(tp, flat_ids, flat_pos, segs=segs, theta=float(theta),
-                       interpret=_interpret())
+    rows = gather_rope(tp, flat_ids, flat_pos, segs=tuple(segs),
+                       theta=float(theta), interpret=_interpret())
     return rows[:, :W].reshape(*ids.shape, W)
 
 

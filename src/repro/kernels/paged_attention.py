@@ -132,7 +132,8 @@ def paged_attention(q: jax.Array, k_pages: jax.Array,
                     window: int = 0, k2_pages: jax.Array | None = None,
                     k_scale_pages: jax.Array | None = None,
                     v_scale_pages: jax.Array | None = None,
-                    mla_split: int = 0, interpret: bool = True) -> jax.Array:
+                    mla_split: int = 0,
+                    interpret: bool | None = None) -> jax.Array:
     """In-place paged attention of a whole query chunk.
 
     q           (B, T, KV, G, dq)   post-RoPE queries; lane t at pos0 + t
@@ -149,6 +150,9 @@ def paged_attention(q: jax.Array, k_pages: jax.Array,
     (NP, ps, KV) enable the int8 pool. The kernel never materialises a
     gathered cache: page ``table[b, j]`` is read in place on grid step j.
     """
+    if interpret is None:
+        from repro.kernels.ops import _interpret
+        interpret = _interpret()
     B, T, KV, G, dq = q.shape
     NP, ps = k_pages.shape[:2]
     P = table.shape[1]

@@ -33,9 +33,13 @@ def _rmsnorm_matmul_kernel(x_ref, scale_ref, w_ref, out_ref, *, eps):
                                     'interpret'))
 def rmsnorm_matmul(x: jax.Array, scale: jax.Array, w: jax.Array, *,
                    block_rows: int = 128, block_cols: int = 128,
-                   eps: float = 1e-6, interpret: bool = True) -> jax.Array:
+                   eps: float = 1e-6,
+                   interpret: bool | None = None) -> jax.Array:
     """x (N, d), scale (d,), w (d, W) -> (N, W). N % block_rows == 0,
     W % block_cols == 0 (ops.py pads)."""
+    if interpret is None:
+        from repro.kernels.ops import _interpret
+        interpret = _interpret()
     N, d = x.shape
     W = w.shape[1]
     bn, bo = min(block_rows, N), min(block_cols, W)

@@ -68,8 +68,8 @@ def main() -> None:
                     help='prepend a common system prompt of this many '
                          'tokens to every request (demonstrates the '
                          'prefix-cache hit rate)')
-    ap.add_argument('--attn-backend', default='reference',
-                    choices=['reference', 'pallas'],
+    ap.add_argument('--attn-backend', default='auto',
+                    choices=['auto', 'reference', 'pallas'],
                     help='attention backend for every decode attend: '
                          '"reference" keeps the lane-at-a-time bit-identity '
                          'oracle (paged mode gathers a dense view per '
@@ -78,7 +78,9 @@ def main() -> None:
                          'the pool through the page table and all chunk '
                          'query lanes are batched into one dispatch '
                          '(compiled on TPU, interpret mode on CPU; outputs '
-                         'match reference to fp32 tolerance, not bitwise)')
+                         'match reference to fp32 tolerance, not bitwise); '
+                         '"auto" (default) picks pallas on TPU and '
+                         'reference elsewhere')
     ap.add_argument('--deadline', type=float, default=0.0,
                     help='per-request wall-clock budget in seconds, '
                          'enforced every engine step; an expired request '

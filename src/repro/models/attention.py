@@ -426,17 +426,24 @@ class PageTables:
     (all-zero K/V, pos == -1) — unallocated table entries point at it so
     gathers are always in-bounds and masked out by position validity.
     ``sc_ring`` is static (it sets trace shapes).
+
+    ``pending`` (K,) int32, optional: physical pages awaiting deferred
+    clear-on-alloc (0 = padding). Backends with ``fused_maintenance`` fold
+    these clears into each layer's fused chunk write
+    (``kernels.paged_maintenance``) instead of a standalone clear dispatch;
+    the reference backend clears eagerly and passes all zeros.
     """
     pt: jax.Array
     rt: jax.Array
     sc_ring: int
+    pending: Optional[jax.Array] = None
 
     def tree_flatten(self):
-        return (self.pt, self.rt), (self.sc_ring,)
+        return (self.pt, self.rt, self.pending), (self.sc_ring,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], children[1], aux[0])
+        return cls(children[0], children[1], aux[0], children[2])
 
     def table_for(self, window: int, page_size: int
                   ) -> Tuple[jax.Array, int]:
@@ -608,17 +615,32 @@ def paged_update_chunk(cache: Dict, k_new: jax.Array, v_new: jax.Array,
 
 def chunk_write(cache: Dict, k_h: jax.Array, v_h: jax.Array,
                 pos0: jax.Array, n_valid: jax.Array, *,
-                window: int, paged: Optional[PageTables]) -> Dict:
+                window: int, paged: Optional[PageTables],
+                backend=None) -> Dict:
     """Chunk K/V write into the stored cache: the dense ring update, or a
     scatter through the layer's page table in paged mode. How the queries
     then *read* that storage is the attention backend's decision
     (``repro.models.attn_backend``) — the reference backend gathers a
     dense-shaped :func:`paged_view`, the Pallas backend reads pages in
-    place."""
+    place. A ``fused_maintenance`` backend also WRITES in place: the
+    chunk scatter runs as a per-page Pallas job list that folds in this
+    step's deferred clear-on-alloc (``paged.pending``), so the write pass
+    touches each pool page once (bitwise identical to clear + scatter)."""
     if paged is None:
         return cache_update_chunk(cache, k_h, v_h, pos0, n_valid)
     ps = cache['k'].shape[1]
     table, Sc = paged.table_for(window, ps)
+    if (getattr(_backend(backend), 'fused_maintenance', False)
+            and paged.pending is not None):
+        from repro.kernels import paged_maintenance as PM
+        if 'k_scale' in cache:
+            kq, ks = _quantize(k_h)
+            vq, vs = _quantize(v_h)
+            upd = {'k': kq, 'v': vq, 'k_scale': ks, 'v_scale': vs}
+        else:
+            upd = {'k': k_h, 'v': v_h}
+        return PM.fused_chunk_scatter(cache, upd, pos0, n_valid, table, Sc,
+                                      paged.pending)
     return paged_update_chunk(cache, k_h, v_h, pos0, n_valid, table, Sc)
 
 
@@ -759,7 +781,7 @@ def decode_chunk(params, x_normed: Optional[jax.Array], cache: Dict,
         k_h = L.apply_rope(k_h, pos_t, rope_theta)
     v_h = v.reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
     cache = chunk_write(cache, k_h, v_h, pos0, n_valid, window=window,
-                        paged=paged)
+                        paged=paged, backend=backend)
     ctx = _backend(backend).attend_chunk(q, cache, pos0, cfg,
                                          rope_theta=rope_theta,
                                          window=window,

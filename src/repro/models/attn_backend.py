@@ -16,11 +16,27 @@ serving, MLA latent, hybrid — routes through one of these backend objects:
   place** from the global pool through the per-slot page table (no dense
   gather is ever materialised) and all T query lanes of a prefill chunk are
   batched into one dispatch (no per-lane loop). Dense caches are viewed as
-  identity-table pages (a free reshape). Outputs match the reference within
-  fp32 running-softmax tolerance — not bitwise — so serving stacks that pin
-  bit-identity keep the default.
+  identity-table pages (a free reshape). It also declares
+  ``fused_maintenance``: paged cache WRITES (chunk scatter, clear-on-alloc,
+  copy-on-write) run as :mod:`repro.kernels.paged_maintenance` kernels
+  instead of XLA scatters, so a paged decode step touches each pool page
+  once.
 
-Backends are stateless singletons; resolve one with :func:`get_backend`.
+Parity contract, per backend (enforced by ``tests/test_attn_backend.py``):
+
+- ``'reference'`` — BITWISE. Tokens/logits are bit-identical to the
+  historical dense engine across chunking, paging, packing and
+  preempt/resume.
+- ``'pallas'`` — cache *contents* are bitwise (the fused maintenance
+  kernels' one-hot-matmul scatter reproduces the XLA scatter exactly);
+  attend *outputs* match the reference within ``PALLAS_TOL`` (atol = rtol =
+  2e-4, ~a few fp32 ulps through the running-softmax reassociation, headroom
+  for bf16 inputs). Serving stacks that pin strict bit-identity keep
+  ``'reference'``.
+
+``'auto'`` resolves to ``'pallas'`` on TPU (where the kernels compile) and
+``'reference'`` elsewhere — the engine's default. Backends are stateless
+singletons; resolve one with :func:`get_backend`.
 """
 from __future__ import annotations
 
@@ -30,6 +46,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
+
+# documented accuracy bound for the pallas backend's attend outputs vs the
+# reference (see module docstring; asserted by tests/test_attn_backend.py)
+PALLAS_TOL = dict(atol=2e-4, rtol=2e-4)
 
 
 class AttnBackend:
@@ -44,6 +64,11 @@ class AttnBackend:
     """
 
     name = 'abstract'
+    # fused paged maintenance: when True, chunk_write runs the
+    # kernels/paged_maintenance job-list kernel (chunk scatter + deferred
+    # clear-on-alloc in one per-page pass) and the engine defers page
+    # clears into PageTables.pending and uses the COW DMA kernel
+    fused_maintenance = False
 
     def attend_chunk(self, q: jax.Array, cache: Dict, pos0: jax.Array,
                      cfg: ModelConfig, *, rope_theta, window: int = 0,
@@ -113,6 +138,7 @@ class PallasBackend(AttnBackend):
     """
 
     name = 'pallas'
+    fused_maintenance = True
 
     @staticmethod
     def _as_pages(cache: Dict, leaves, window: int, paged):
@@ -178,14 +204,24 @@ PALLAS = PallasBackend()
 BACKENDS = {b.name: b for b in (REFERENCE, PALLAS)}
 
 
+def auto_backend() -> AttnBackend:
+    """The platform pick: 'pallas' where the kernels compile (TPU),
+    'reference' where they would run interpreted (CPU/GPU)."""
+    return REFERENCE if _interpret() else PALLAS
+
+
 def get_backend(backend: Optional['str | AttnBackend']) -> AttnBackend:
-    """None -> reference; a name -> the singleton; an instance passes."""
+    """None -> reference; 'auto' -> the platform pick; a name -> the
+    singleton; an instance passes."""
     if backend is None:
         return REFERENCE
     if isinstance(backend, AttnBackend):
         return backend
+    if backend == 'auto':
+        return auto_backend()
     try:
         return BACKENDS[backend]
     except KeyError:
         raise ValueError(f'unknown attention backend {backend!r}; '
-                         f'choose from {sorted(BACKENDS)}') from None
+                         f"choose from {sorted(BACKENDS) + ['auto']}") \
+            from None

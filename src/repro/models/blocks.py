@@ -423,8 +423,9 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
         if chunked:
             return M.mla_decode_chunk(params['attn'], xn, state, pos,
                                       n_valid, cfg, rope_theta=theta,
-                                      latents=latents, paged=paged,
-                                      backend=backend)
+                                      latents=latents,
+                                      rope_applied=rope_applied,
+                                      paged=paged, backend=backend)
         return M.mla_decode_step(params['attn'], xn, state, pos, cfg,
                                  rope_theta=theta, latents=latents,
                                  backend=backend)
@@ -488,7 +489,8 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
         v_h = v.reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
         if chunked:
             acache = A.chunk_write(state['attn'], k_h, v_h, pos, n_valid,
-                                   window=window, paged=paged)
+                                   window=window, paged=paged,
+                                   backend=backend)
             ctx = A._backend(backend).attend_chunk(
                 q, acache, pos, cfg, rope_theta=theta, window=window,
                 paged=paged)

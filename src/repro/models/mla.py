@@ -216,6 +216,7 @@ def mla_cache_update_chunk(cache: Dict, c_kv: jax.Array, k_pe_rot: jax.Array,
 def mla_decode_chunk(params, x_normed: Optional[jax.Array], cache: Dict,
                      pos0: jax.Array, n_valid: jax.Array, cfg: ModelConfig, *,
                      rope_theta, latents: Optional[Tuple] = None,
+                     rope_applied: bool = False,
                      paged=None, backend=None) -> Tuple[jax.Array, Dict]:
     """Absorbed-form chunked-prefill MLA: project (or take precomputed
     latents for) a whole (B,T) chunk, write the valid lanes' ``c_kv``/``k_pe``
@@ -237,16 +238,28 @@ def mla_decode_chunk(params, x_normed: Optional[jax.Array], cache: Dict,
         q, c_kv, k_pe = latents
     B, T = q.shape[:2]
     pos_t = pos0[:, None].astype(jnp.int32) + jnp.arange(T, dtype=jnp.int32)
-    k_pe_rot = L.apply_rope(k_pe[:, :, None, :], pos_t, rope_theta)[:, :, 0]
+    # ``rope_applied``: the fused gather→RoPE kernel already rotated the
+    # per-head qk_rope q slices and the k_pe slice at gather time
+    k_pe_rot = k_pe if rope_applied else \
+        L.apply_rope(k_pe[:, :, None, :], pos_t, rope_theta)[:, :, 0]
     if paged is None:
         cache = mla_cache_update_chunk(cache, c_kv, k_pe_rot, pos0, n_valid)
     else:
         # MLA layers are full-causal (append-only): always the linear table
         table, Sc = paged.table_for(0, cache['ckv'].shape[1])
-        cache = paged_scatter(cache, {'ckv': c_kv, 'kpe': k_pe_rot}, pos0,
-                              n_valid, table, Sc)
+        if (getattr(_backend(backend), 'fused_maintenance', False)
+                and paged.pending is not None):
+            from repro.kernels import paged_maintenance as PM
+            cache = PM.fused_chunk_scatter(cache,
+                                           {'ckv': c_kv, 'kpe': k_pe_rot},
+                                           pos0, n_valid, table, Sc,
+                                           paged.pending)
+        else:
+            cache = paged_scatter(cache, {'ckv': c_kv, 'kpe': k_pe_rot},
+                                  pos0, n_valid, table, Sc)
     q_nope, q_pe = _split_q(q, cfg)                   # (B,T,H,dn)/(B,T,H,dr)
-    q_pe = L.apply_rope(q_pe, pos_t, rope_theta)
+    if not rope_applied:
+        q_pe = L.apply_rope(q_pe, pos_t, rope_theta)
     ctx = _backend(backend).attend_mla(params, q_nope, q_pe, cache, pos0,
                                        cfg, paged=paged)  # (B,T,H,dv)
     return L.dense(params['wo'], ctx.reshape(B, T, -1)), cache

@@ -476,7 +476,7 @@ def lm_decode_step(params, tokens: jax.Array, states: Dict, pos: jax.Array,
             pos_t = pos[:, None].astype(jnp.int32) \
                 + jnp.arange(T, dtype=jnp.int32)
         if precomputed is not None:
-            if fused_gather_rope:
+            if fused_gather_rope and fused_rope_eligible(precomputed, cfg):
                 pre0 = _fused_gather_rope_pre0(precomputed, tokens, pos_t, cfg)
                 rope_applied = True
             else:
@@ -499,24 +499,67 @@ def lm_decode_step(params, tokens: jax.Array, states: Dict, pos: jax.Array,
     return out, states
 
 
+def fused_rope_eligible(precomputed, cfg: ModelConfig) -> bool:
+    """Can layer 0's row gather fold RoPE in-kernel for this config?
+
+    True for rope-positional attention-first stacks whose precomputed row
+    carries either the flat q/k layout (dense GQA) or the MLA latent layout
+    (per-head ``[qk_nope | qk_rope]`` q slices plus the shared ``k_pe``
+    slice). Ineligible configs (hybrid/recurrent layer 0, learned
+    positions) fall back to the unfused gather — callers need no
+    special-casing.
+    """
+    from repro.models.blocks import ATTN_KINDS
+    if precomputed is None or cfg.pos != 'rope':
+        return False
+    if layer_plan(cfg).kinds[0] not in ATTN_KINDS:
+        return False
+    names = [nm for nm, _ in precomputed.layout]
+    if cfg.mla is not None:
+        return 'q' in names and 'ckv' in names and 'kpe' in names
+    return 'q' in names and 'k' in names
+
+
 def _fused_gather_rope_pre0(precomputed, tokens: jax.Array, pos_t: jax.Array,
                             cfg: ModelConfig) -> Dict[str, jax.Array]:
     """Layer-0 rows via the fused gather→RoPE kernel: one table read per
-    token with the q/k slices already rotated for their positions."""
+    token with the rotary slices already rotated for their positions —
+    q/k for the dense layout, per-head ``qk_rope`` plus ``k_pe`` for MLA."""
     from repro.kernels import ops
     from repro.models.blocks import kind_theta
     plan = layer_plan(cfg)
-    names = [nm for nm, _ in precomputed.layout]
-    assert 'q' in names and 'k' in names, \
-        'fused gather→RoPE needs a flat q/k row layout'
-    assert cfg.pos == 'rope'
+    assert fused_rope_eligible(precomputed, cfg)
     offs, off = {}, 0
     for nm, w in precomputed.layout:
         offs[nm] = off
         off += w
-    rows = ops.gather_rope_rows(
-        precomputed.table, tokens, pos_t,
-        q_off=offs['q'], num_heads=cfg.num_heads,
-        k_off=offs['k'], num_kv_heads=cfg.num_kv_heads,
-        head_dim=cfg.head_dim, theta=kind_theta(cfg, plan.kinds[0]))
+    theta = kind_theta(cfg, plan.kinds[0])
+    if cfg.mla is not None:
+        m = cfg.mla
+        dn, dr = m.qk_nope_dim, m.qk_rope_dim
+        segs = tuple((offs['q'] + h * (dn + dr) + dn, 1, dr)
+                     for h in range(cfg.num_heads))
+        segs += ((offs['kpe'], 1, dr),)
+        rows = ops.gather_rope_rows_segs(precomputed.table, tokens, pos_t,
+                                         segs=segs, theta=theta)
+    else:
+        rows = ops.gather_rope_rows(
+            precomputed.table, tokens, pos_t,
+            q_off=offs['q'], num_heads=cfg.num_heads,
+            k_off=offs['k'], num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, theta=theta)
     return precomputed.split(rows)
+
+
+def pad_table_for_fused(precomputed):
+    """Pad the precomputed table's row width to the Pallas kernels' 128-lane
+    alignment ONCE, so ``ops`` wrappers don't re-pad (copy) the whole table
+    inside every jit'd chunk dispatch. ``split()`` reads only the layout's
+    widths, so trailing pad columns are inert."""
+    import dataclasses
+    pad = (-precomputed.table.shape[1]) % 128
+    if pad:
+        precomputed = dataclasses.replace(
+            precomputed,
+            table=jnp.pad(precomputed.table, ((0, 0), (0, pad))))
+    return precomputed

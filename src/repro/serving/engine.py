@@ -27,19 +27,33 @@ through per-slot page tables, and admission looks the prompt up in a
 token-prefix radix index (``repro.serving.kvpool``). A request whose
 prompt shares a cached prefix attaches the prefix's pages read-only and
 skips that part of its chunked prefill entirely — the shared-system-prompt
-TTFT win. With the default ``attn_backend='reference'`` decode attends
-over a gathered dense-shaped *view* of the slot's pages, so token outputs
-stay bit-identical to the dense engine.
+TTFT win. Under the ``'reference'`` backend decode attends over a gathered
+dense-shaped *view* of the slot's pages, so token outputs stay
+bit-identical to the dense engine.
 
-**Attention backend** (``attn_backend='reference' | 'pallas'``): every
-attend in the stack routes through ``repro.models.attn_backend``. The
-reference backend is the bit-identity oracle (lane-at-a-time rounding,
-dense-gathered paged views). The Pallas backend runs
-``kernels/paged_attention.py``: KV pages are read **in place** through the
-page table (the per-layer dense gather disappears) and all chunk query
-lanes are batched into one kernel dispatch — outputs match the reference
-within fp32 running-softmax tolerance, not bitwise (compiled on TPU;
-interpret mode elsewhere, for validation only).
+**Attention backend** (``attn_backend='auto' | 'reference' | 'pallas'``):
+every attend in the stack routes through ``repro.models.attn_backend``.
+Selection policy — ``'auto'`` (the default) resolves per platform: TPU,
+where the kernels compile, gets ``'pallas'``; CPU/GPU, where they would
+run interpreted (orders of magnitude slower, for validation only), get
+``'reference'``. Passing a concrete name pins the backend regardless of
+platform. The parity contract per backend: ``'reference'`` is the
+bit-identity oracle (lane-at-a-time rounding, dense-gathered paged
+views) — tokens/logits bit-identical to the dense engine across chunking,
+paging, packing and preempt/resume. ``'pallas'`` runs
+``kernels/paged_attention.py`` — KV pages are read **in place** through
+the page table (the per-layer dense gather disappears) and all chunk
+query lanes are batched into one kernel dispatch; attend outputs match
+the reference within ``attn_backend.PALLAS_TOL`` (fp32 running-softmax
+reassociation, not bitwise), while cache *contents* stay bitwise. The
+pallas backend also declares ``fused_maintenance``: the per-layer paged
+cache writes move in-kernel (``kernels/paged_maintenance.py``) — the
+chunk K/V scatter becomes a per-page job-list kernel, clear-on-alloc is
+deferred (``PageTables.pending``) and folded into first-write masking in
+that same pass, and copy-on-write runs as a page-to-page DMA kernel — so
+a paged decode step touches each pool page once, with no standalone
+clear/COW XLA dispatch and no dense (B,S,H,d) gather anywhere on the hot
+path.
 Sliding-window layers get private ring pages; architectures with ring or
 recurrent state additionally store a per-boundary state *snapshot* on the
 radix node and restore it on a hit. A request that stops short inside a
@@ -87,7 +101,13 @@ token — during chunked prefill that is one contiguous *multi-row* gather per
 chunk. ``fused_gather_rope=True`` additionally folds layer-0 RoPE into that
 gather via the Pallas kernel (``kernels/gather_rope.py``), so rows go
 gather→RoPE→attention without an HBM round-trip (compiled TPU path; on CPU
-the kernel runs in interpret mode and is for validation only).
+the kernel runs in interpret mode and is for validation only). This covers
+dense q/k layouts AND MLA layouts (each head's rotary ``q_pe`` slice plus
+the shared ``k_pe`` row rotate in-gather; the attend is told via
+``rope_applied``); eligibility is decided by
+``transformer.fused_rope_eligible`` and ineligible configs (non-rope
+position encodings, hybrid layer-0) silently fall back to the unfused
+gather — no special-casing here.
 
 **Failure semantics** (fault-tolerant serving): every request carries a
 ``RequestStatus`` lifecycle (``QUEUED → PREFILLING → DECODING → FINISHED``,
@@ -113,8 +133,11 @@ a *per-request outcome* — the engine itself never dies on load:
   ``error='unschedulable'`` instead of wedging the queue.
 - **Cancellation and deadlines**: :meth:`ServingEngine.cancel` removes a
   request wherever it is (queued or mid-flight, prefill or decode);
-  ``Request(deadline_s=...)`` is a wall-clock budget from submit time,
-  enforced at the top of every :meth:`step_once`.
+  ``Request(deadline_s=...)`` is an elapsed-time budget from submit time,
+  enforced at the top of every :meth:`step_once` on the **monotonic**
+  clock (``time.monotonic()`` — a wall-clock step from NTP/DST can
+  neither spuriously expire a request nor immortalize one; all request
+  timestamps are monotonic stamps, meaningful only as differences).
 - **NaN/Inf watchdog**: every dispatch returns a per-lane finiteness flag
   on the sampled logits; a non-finite lane fails *only that request*
   (``error='nonfinite_logits'``) — the batch keeps decoding.
@@ -138,6 +161,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import paged_maintenance as PM
 from repro.models import attention as A
 from repro.models.model import Model
 from repro.models.transformer import lm_logits
@@ -199,6 +223,8 @@ class Request:
     error: Optional[str] = None           # why status == FAILED
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # monotonic-clock stamps (time.monotonic()): only differences are
+    # meaningful (latency = finish_t - submit_t); never compare to wall time
     submit_t: float = 0.0
     first_token_t: float = 0.0
     finish_t: float = 0.0
@@ -232,7 +258,7 @@ class ServingEngine:
                  chunk_size: int = 1, fused_gather_rope: bool = False,
                  prefix_cache: bool = False, page_size: int = 16,
                  num_pages: Optional[int] = None,
-                 attn_backend: str = 'reference',
+                 attn_backend: str = 'auto',
                  fault_injector: Optional[FaultInjector] = None,
                  admit_retry_steps: int = 8,
                  pack_prefill: bool = False):
@@ -249,26 +275,19 @@ class ServingEngine:
             if self.attn_backend.name != 'reference':
                 raise ValueError('audio enc-dec decode supports only the '
                                  'reference attention backend')
-        from repro.models.blocks import ATTN_KINDS, kind_window
-        from repro.models.transformer import layer_plan
+        from repro.models.blocks import kind_window
+        from repro.models.transformer import (fused_rope_eligible, layer_plan,
+                                              pad_table_for_fused)
         plan = layer_plan(model.cfg)
-        kind0 = plan.kinds[0]
-        if fused_gather_rope and (precomputed is None or chunk_size == 1
-                                  or model.cfg.pos != 'rope'
-                                  or model.cfg.mla is not None
-                                  or kind0 not in ATTN_KINDS):
-            fused_gather_rope = False   # kernel needs a flat q/k row layout
+        # fused gather→RoPE eligibility lives with the model code now
+        # (transformer.fused_rope_eligible — q/k AND MLA-latent layouts);
+        # ineligible configs silently fall back to the unfused gather.
+        if fused_gather_rope and (chunk_size == 1 and not prefix_cache):
+            fused_gather_rope = False   # one-token path never fuses
+        fused_gather_rope = fused_gather_rope \
+            and fused_rope_eligible(precomputed, model.cfg)
         if fused_gather_rope:
-            # pad the table's row width to the kernel's 128-lane alignment
-            # ONCE — otherwise ops.gather_rope_rows re-pads (copies) the
-            # whole table inside every jit'd chunk dispatch. split() reads
-            # only the layout's widths, so trailing pad columns are inert.
-            pad = (-precomputed.table.shape[1]) % 128
-            if pad:
-                precomputed = dataclasses.replace(
-                    precomputed,
-                    table=jnp.pad(precomputed.table, ((0, 0), (0, pad))))
-            self.precomputed = precomputed
+            self.precomputed = precomputed = pad_table_for_fused(precomputed)
         self.chunk_size = chunk_size
         self.fused_gather_rope = fused_gather_rope
         self._meta = getattr(model.cfg, 'num_meta_tokens', 0)
@@ -373,6 +392,16 @@ class ServingEngine:
         self.n_stalled = 0
 
         # ------------------------------------------------ per-slot paging
+        # Deferred clear-on-alloc: with a fused_maintenance backend, freshly
+        # allocated pages are queued here instead of being zeroed by a
+        # standalone XLA dispatch; the queue rides into the next step as
+        # PageTables.pending and every paged layer folds the clears into
+        # its fused chunk write (kernels/paged_maintenance). Overflow past
+        # _pending_cap (a fixed jit shape) flushes eagerly.
+        self._fused_maint = self.paged \
+            and getattr(self.attn_backend, 'fused_maintenance', False)
+        self._pending_clear: List[int] = []
+        self._pending_cap = 64
         if self.paged:
             self._pt = np.zeros((max_slots, self._pages_lin), np.int32)
             self._rt = np.zeros((max_slots, max(self._pages_ring, 1)),
@@ -393,10 +422,10 @@ class ServingEngine:
         sc_ring = self._sc_ring
         backend = self.attn_backend
 
-        def paged_tables(pt, rt):
+        def paged_tables(pt, rt, pending=None):
             if pt is None:
                 return None
-            return A.PageTables(pt, rt, sc_ring)
+            return A.PageTables(pt, rt, sc_ring, pending)
 
         def step(params, states, tokens, pos, key, temps, lane_valid):
             logits, states, stats = model.decode_step(
@@ -422,12 +451,12 @@ class ServingEngine:
         self._step_logits = jax.jit(step_logits, donate_argnums=1)
 
         def chunk_hidden(params, states, tokens, pos, n_valid, key, temps,
-                         pt, rt):
+                         pt, rt, pending):
             h, states, stats = model.decode_step(
                 params, tokens, states, pos, precomputed=precomputed,
                 n_valid=n_valid, return_hidden=True,
                 fused_gather_rope=self.fused_gather_rope,
-                paged=paged_tables(pt, rt), return_stats=True,
+                paged=paged_tables(pt, rt, pending), return_stats=True,
                 attn_backend=backend)
             # head only on each slot's last valid lane, not all T lanes
             idx = jnp.maximum(n_valid - 1, 0)[:, None, None]
@@ -438,19 +467,21 @@ class ServingEngine:
             return h, states, nxt, stats['moe_drops'], finite
 
         def chunk_step(params, states, tokens, pos, n_valid, key, temps,
-                       pt=None, rt=None):
+                       pt=None, rt=None, pending=None):
             _, states, nxt, drops, finite = chunk_hidden(
-                params, states, tokens, pos, n_valid, key, temps, pt, rt)
+                params, states, tokens, pos, n_valid, key, temps, pt, rt,
+                pending)
             return states, nxt, drops, finite
 
         def chunk_step_logits(params, states, tokens, pos, n_valid, key,
-                              temps, pt=None, rt=None):
+                              temps, pt=None, rt=None, pending=None):
             # logits-on-demand: same sampled-token program as chunk_step
             # (last-valid-lane head), plus the lm_head on EVERY lane for
             # prompt scoring — padding lanes (t >= n_valid) are garbage and
             # dropped host-side.
             h, states, nxt, drops, finite = chunk_hidden(
-                params, states, tokens, pos, n_valid, key, temps, pt, rt)
+                params, states, tokens, pos, n_valid, key, temps, pt, rt,
+                pending)
             return states, nxt, drops, finite, lm_logits(params, h, model.cfg)
 
         # paged mode always runs the chunk-shaped program (its T == 1 case
@@ -463,7 +494,7 @@ class ServingEngine:
             if want_chunk else None
 
         def packed_hidden(params, states, tokens, pos, n_valid, packed, key,
-                          temps, pt, rt):
+                          temps, pt, rt, pending):
             # segment-packed prefill: tokens is the bin-packed (R, T) grid,
             # pos/n_valid/states stay slot-major (S,). Each slot's last
             # valid hidden lives at lane (seg_row, seg_off + n_valid - 1).
@@ -471,8 +502,8 @@ class ServingEngine:
                 params, tokens, states, pos, precomputed=precomputed,
                 n_valid=n_valid, return_hidden=True,
                 fused_gather_rope=self.fused_gather_rope,
-                paged=paged_tables(pt, rt), packed=packed, return_stats=True,
-                attn_backend=backend)
+                paged=paged_tables(pt, rt, pending), packed=packed,
+                return_stats=True, attn_backend=backend)
             R, T = tokens.shape
             flat = h.reshape((R * T,) + h.shape[2:])
             idx = packed.seg_row * T + packed.seg_off \
@@ -484,19 +515,19 @@ class ServingEngine:
             return h, states, nxt, stats['moe_drops'], finite
 
         def packed_step(params, states, tokens, pos, n_valid, packed, key,
-                        temps, pt=None, rt=None):
+                        temps, pt=None, rt=None, pending=None):
             _, states, nxt, drops, finite = packed_hidden(
                 params, states, tokens, pos, n_valid, packed, key, temps,
-                pt, rt)
+                pt, rt, pending)
             return states, nxt, drops, finite
 
         def packed_step_logits(params, states, tokens, pos, n_valid, packed,
-                               key, temps, pt=None, rt=None):
+                               key, temps, pt=None, rt=None, pending=None):
             # packed scoring: the lm_head on every packed lane — slot s's
             # prompt logits live at row seg_row[s], cols seg_off[s]..+n_valid
             h, states, nxt, drops, finite = packed_hidden(
                 params, states, tokens, pos, n_valid, packed, key, temps,
-                pt, rt)
+                pt, rt, pending)
             return states, nxt, drops, finite, \
                 lm_logits(params, h, model.cfg)
 
@@ -567,7 +598,30 @@ class ServingEngine:
                 return leaf.at[dst].set(row)
             return jax.tree_util.tree_map_with_path(one, states, mask)
 
-        self._cow_copy = jax.jit(cow, donate_argnums=0)
+        def cow_pallas(states, src, dst, rem):
+            # same contract as `cow`, as a page-to-page DMA kernel: each
+            # pool leaf is one cow_page_copy dispatch (scan-stacked 'body'
+            # leaves flatten their (reps, NP) leading axes and issue one
+            # job per scan rep) instead of a gather + masked scatter pair
+            def one(path, leaf, m):
+                if not m:
+                    return leaf
+                fill = -1 if _is_pos_leaf(path) else 0
+                if _is_body(path):
+                    R, NP = leaf.shape[:2]
+                    offs = jnp.arange(R, dtype=jnp.int32) * NP
+                    sdr = jnp.stack(
+                        [src + offs, dst + offs,
+                         jnp.full((R,), rem, jnp.int32)], axis=1)
+                    flat = leaf.reshape((R * NP,) + leaf.shape[2:])
+                    return PM.cow_page_copy(flat, sdr,
+                                            fill=fill).reshape(leaf.shape)
+                sdr = jnp.stack([src, dst, rem]).astype(jnp.int32)[None]
+                return PM.cow_page_copy(leaf, sdr, fill=fill)
+            return jax.tree_util.tree_map_with_path(one, states, mask)
+
+        self._cow_copy = jax.jit(cow_pallas if self._fused_maint else cow,
+                                 donate_argnums=0)
 
         def capture(states, slot, ring_pages):
             # snapshot of everything a shared-page attach cannot restore:
@@ -618,7 +672,7 @@ class ServingEngine:
         ``ValueError``: uids are the cancel/dedup handle and must be unique
         among concurrent requests.
         """
-        req.submit_t = time.time()
+        req.submit_t = time.monotonic()
         err = self._validate(req)
         if err is not None:
             req.status = RequestStatus.FAILED
@@ -647,7 +701,7 @@ class ServingEngine:
         """Move a request to a terminal status and update counters."""
         req.status = status
         req.error = error
-        req.finish_t = time.time()
+        req.finish_t = time.monotonic()
         if status is RequestStatus.FINISHED:
             req.done = True
         elif status is RequestStatus.FAILED:
@@ -681,8 +735,11 @@ class ServingEngine:
         return False
 
     def _check_deadlines(self) -> None:
-        """Fail any live request whose wall-clock budget has expired."""
-        now = time.time()
+        """Fail any live request whose time budget has expired. Uses the
+        monotonic clock: a wall-clock (``time.time``) step — NTP slew,
+        manual reset, DST — must never spuriously expire (or immortalize)
+        an in-flight request."""
+        now = time.monotonic()
 
         def expired(req: Request) -> bool:
             return req.deadline_s is not None \
@@ -724,9 +781,41 @@ class ServingEngine:
         pages = self.kv.alloc(n)
         if pages is None:
             return None
-        ids = jnp.asarray(np.asarray(pages, np.int32))
-        self.states = self._clear_pages(self.states, ids)
+        if self._fused_maint:
+            # clear-on-alloc is deferred: the ids ride into the next fused
+            # dispatch as PageTables.pending, where the maintenance kernel
+            # folds the clear into first-write masking (or a mode-2 clear
+            # job) — no standalone XLA clear dispatch on the hot path
+            self._pending_clear.extend(pages)
+            if len(self._pending_clear) > self._pending_cap:
+                self._flush_pending()       # overflow: rare, eager is fine
+        else:
+            ids = jnp.asarray(np.asarray(pages, np.int32))
+            self.states = self._clear_pages(self.states, ids)
         return pages
+
+    def _flush_pending(self) -> None:
+        """Eagerly clear deferred pages. Needed whenever raw page contents
+        are read outside the fused kernels (snapshot capture) or the
+        pending list outgrows the fixed-width array the kernels take."""
+        if not self._pending_clear:
+            return
+        ids = jnp.asarray(np.asarray(self._pending_clear, np.int32))
+        self.states = self._clear_pages(self.states, ids)
+        self._pending_clear = []
+
+    def _pending_array(self) -> Optional[jax.Array]:
+        """Deferred-clear page ids as the fixed-width (cap,) int32 array the
+        fused maintenance kernels consume (zero-padded; page 0 is the null
+        page, so padding entries decay to idempotent null-page rewrites).
+        None when maintenance is not fused — the jitted programs then build
+        PageTables without a pending leaf and nothing defers."""
+        if not self._fused_maint:
+            return None
+        arr = np.zeros(self._pending_cap, np.int32)
+        ids = self._pending_clear[:self._pending_cap]
+        arr[:len(ids)] = ids
+        return jnp.asarray(arr)
 
     def _release_slot_pages(self, slot: int) -> None:
         if self.slot_node[slot] is not None:
@@ -783,6 +872,11 @@ class ServingEngine:
                         jnp.int32(tail_len))
                     cow_page = alloc[0]
                     eff += tail_len
+                    if self._fused_maint and alloc[0] in self._pending_clear:
+                        # the COW kernel just wrote dst in full (copied
+                        # head + null tail); a later deferred clear would
+                        # destroy it
+                        self._pending_clear.remove(alloc[0])
                 else:
                     self.kv.free(alloc)
         self._reset_slot(slot)
@@ -804,6 +898,12 @@ class ServingEngine:
                 ring if ring else [self.num_pages], np.int32))
             self.states = self._restore(self.states, node.snapshot,
                                         jnp.int32(slot), ring_ids)
+            if self._fused_maint:
+                # restored ring pages carry live snapshot content now —
+                # drop their deferred clears
+                keep = set(ring)
+                self._pending_clear = [p for p in self._pending_clear
+                                       if p not in keep]
         # where to publish this prompt's prefix
         if req.return_logits:
             self.slot_insert_at[slot] = -1
@@ -878,6 +978,8 @@ class ServingEngine:
             ring_ids = jnp.asarray(np.asarray(
                 self.slot_ring[slot] if self.slot_ring[slot]
                 else [self.num_pages], np.int32))
+            if self._fused_maint:
+                self._flush_pending()   # capture reads raw page contents
             snap = self._capture(self.states, jnp.int32(slot), ring_ids)
         node, transferred = self.kv.insert(
             stream, n_blocks, list(self._pt[slot, :n_blocks]), snapshot=snap)
@@ -970,6 +1072,8 @@ class ServingEngine:
             ring_ids = jnp.asarray(np.asarray(
                 self.slot_ring[slot] if self.slot_ring[slot]
                 else [self.num_pages], np.int32))
+            if self._fused_maint:
+                self._flush_pending()   # capture reads raw page contents
             snap = self._capture(self.states, jnp.int32(slot), ring_ids)
         else:
             if not (p_before < P <= p_after):
@@ -1199,24 +1303,28 @@ class ServingEngine:
                 args = [self.params, self.states, jnp.asarray(ptoks), pos,
                         jnp.asarray(n_valid), playout, sub, temps]
                 if self.paged:
-                    args += [jnp.asarray(self._pt), jnp.asarray(self._rt)]
+                    args += [jnp.asarray(self._pt), jnp.asarray(self._rt),
+                             self._pending_array()]
                 if want_logits:
                     self.states, nxt, drops, finite, logits = \
                         self._packed_step_logits(*args)
                 else:
                     self.states, nxt, drops, finite = self._packed_step(*args)
+                self._pending_clear = []
             else:
                 self.lanes_dispatched += int(tokens.size)
                 self.lane_tokens += int(n_valid.sum())
                 args = [self.params, self.states, jnp.asarray(tokens), pos,
                         jnp.asarray(n_valid), sub, temps]
                 if self.paged:
-                    args += [jnp.asarray(self._pt), jnp.asarray(self._rt)]
+                    args += [jnp.asarray(self._pt), jnp.asarray(self._rt),
+                             self._pending_array()]
                 if want_logits:
                     self.states, nxt, drops, finite, logits = \
                         self._chunk_step_logits(*args)
                 else:
                     self.states, nxt, drops, finite = self._chunk_step(*args)
+                self._pending_clear = []
             consumed = n_valid
         else:
             temps = jnp.asarray([
@@ -1284,7 +1392,7 @@ class ServingEngine:
             req.status = RequestStatus.DECODING
             tok = int(nxt[s])
             if not req.generated:
-                req.first_token_t = time.time()
+                req.first_token_t = time.monotonic()
             req.generated.append(tok)
             self.slot_next_tok[s] = tok
             hit_eos = req.eos_id is not None and tok == req.eos_id

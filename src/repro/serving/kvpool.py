@@ -96,14 +96,20 @@ class PrefixCache:
     def alloc(self, n: int) -> Optional[List[int]]:
         """Take ``n`` pages, evicting cold cached blocks if needed.
 
-        Returns None (and takes nothing) if even full eviction cannot free
-        enough — refcounted pages are never reclaimed.
+        Atomic on failure: if even full eviction cannot free enough
+        (refcounted pages are never reclaimed), returns None having
+        changed NOTHING — free list, radix index, refcounts and LRU state
+        are exactly as before the call. (It used to evict one block at a
+        time until eviction ran dry, so a doomed alloc still tore cached
+        prefixes out of the index before failing — turning pool pressure
+        into gratuitous prefix-cache misses for every later request.)
         """
+        if n > len(self._free) and self.reclaimable() < n:
+            return None
         while len(self._free) < n:
-            if not self._evict_one():
+            if not self._evict_one():       # unreachable after the precheck
                 return None
-        pages = [self._free.pop() for _ in range(n)]
-        return pages
+        return [self._free.pop() for _ in range(n)]
 
     def free(self, pages) -> None:
         for p in pages:

@@ -4,11 +4,21 @@ The reference backend is the bit-identity oracle (lane-at-a-time rounding,
 dense-gathered paged views — pinned by test_chunked_all_archs.py and
 test_paged_prefix.py, which run it by default). The Pallas backend
 (kernels/paged_attention.py, interpret mode on CPU) must match it within
-fp32 running-softmax tolerance across the whole matrix: page sizes {8, 16},
-unaligned final pages, ring wraparound, sliding-window layers, GQA
-fp32/int8, and MLA — at kernel, model-step and engine level. Plus a
-hypothesis property: attention is invariant under any permutation of the
-physical page pool (with the page tables remapped to match).
+the documented ``attn_backend.PALLAS_TOL`` bound across the whole matrix:
+page sizes {8, 16}, unaligned final pages, ring wraparound, sliding-window
+layers, GQA fp32/int8, and MLA — at kernel, model-step and engine level.
+Plus a hypothesis property: attention is invariant under any permutation of
+the physical page pool (with the page tables remapped to match).
+
+The fused paged-maintenance kernels (kernels/paged_maintenance.py — chunk
+scatter + deferred clear-on-alloc + COW DMA) hold a STRICTER contract:
+cache contents bitwise equal to eager clear + XLA scatter, including
+non-page-multiple ring lengths whose last page is partial.
+
+Tests marked ``compiled`` resolve ``interpret`` by platform
+(``kernels.ops._interpret``): on TPU the kernels compile for real; on CPU
+CI they fall back to interpret mode, so the same assertions pin both
+worlds (``pytest -m compiled``).
 """
 import jax
 import jax.numpy as jnp
@@ -18,14 +28,16 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.config import MLAConfig, ModelConfig, MoEConfig
+from repro.kernels import paged_maintenance as PM
 from repro.kernels import ref
 from repro.kernels.paged_attention import paged_attention
-from repro.models.attn_backend import (BACKENDS, PALLAS, REFERENCE,
-                                       get_backend)
+from repro.models.attention import paged_scatter
+from repro.models.attn_backend import (BACKENDS, PALLAS, PALLAS_TOL,
+                                       REFERENCE, auto_backend, get_backend)
 from repro.models.model import Model
 from repro.serving import Request, ServingEngine
 
-TOL = dict(atol=2e-4, rtol=2e-4)        # fp32 running-softmax vs full-softmax
+TOL = PALLAS_TOL        # the documented pallas-vs-reference attend bound
 
 
 # ========================================================== kernel vs oracle
@@ -173,6 +185,7 @@ def test_model_chunked_decode_parity_dense(kind, quant):
 
 
 # ============================================================= engine parity
+@pytest.mark.compiled
 @pytest.mark.parametrize('kind,quant,ps', [
     ('gqa', False, 8), ('gqa', True, 16), ('local', False, 8),
     ('mla', False, 16),
@@ -250,12 +263,166 @@ def test_page_table_permutation_invariance(ps, seed, window, data):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
 
 
+# ===================================================== fused paged maintenance
+def _maint_pool(seed, NP, ps, quant):
+    """Random pool dict with page 0 already the null page (fill values)."""
+    rng = np.random.default_rng(seed)
+    if quant:
+        cache = {
+            'k': rng.integers(-127, 128, (NP, ps, 2, 8)).astype(np.int8),
+            'v': rng.integers(-127, 128, (NP, ps, 2, 8)).astype(np.int8),
+            'k_scale': rng.random((NP, ps, 2), np.float32),
+            'v_scale': rng.random((NP, ps, 2), np.float32),
+        }
+        cache['k_scale'] = cache['k_scale'].astype(jnp.bfloat16)
+        cache['v_scale'] = cache['v_scale'].astype(jnp.bfloat16)
+    else:
+        cache = {'k': rng.standard_normal((NP, ps, 2, 8), np.float32),
+                 'v': rng.standard_normal((NP, ps, 2, 8), np.float32)}
+    cache['pos'] = rng.integers(0, 99, (NP, ps)).astype(np.int32)
+    cache = {nm: jnp.asarray(v) for nm, v in cache.items()}
+    return {nm: v.at[0].set(PM.leaf_fill(nm)) for nm, v in cache.items()}
+
+
+def _eager_clear(cache, pages):
+    return {nm: v.at[np.asarray(pages)].set(PM.leaf_fill(nm))
+            for nm, v in cache.items()}
+
+
+@pytest.mark.parametrize('quant', [False, True])
+@pytest.mark.parametrize('ps,Sc', [
+    (8, 32),     # page-aligned linear table
+    (8, 11),     # ring shorter than 2 pages: partial last page + wraparound
+    (4, 10),     # partial last page, no wrap in this chunk
+])
+def test_fused_chunk_scatter_bitwise(ps, Sc, quant):
+    """fused_chunk_scatter == eager _clear_pages + XLA paged_scatter, bit
+    for bit on every leaf — covering ring wraparound, a non-page-multiple
+    ring's partial last page (its tail rows back no virtual index and must
+    never be written), an inactive slot, a fresh page written this chunk
+    (clear folded into first-write masking) and a pending page not written
+    at all (whole-page clear job)."""
+    B, T = 3, 4
+    P = -(-Sc // ps)
+    NP = 1 + B * P + 3
+    table = np.arange(B * P).reshape(B, P).astype(np.int32) + 1
+    rng = np.random.default_rng(5)
+    cache = _maint_pool(7, NP, ps, quant)
+    # slot 0 wraps the ring, slot 1 starts cold, slot 2 is inactive
+    pos0 = jnp.asarray([Sc - 2, 0, 0], jnp.int32)
+    n_valid = jnp.asarray([T, T - 1, 0], jnp.int32)
+    # slot 1's first page is a fresh alloc; two more pending pages are not
+    # written this chunk; rest of the K-wide array is 0-padding
+    pending = np.zeros(8, np.int32)
+    pending[:3] = [table[1, 0], NP - 1, NP - 2]
+    upd = {'k': rng.standard_normal((B, T, 2, 8), np.float32),
+           'v': rng.standard_normal((B, T, 2, 8), np.float32)}
+    if quant:
+        upd = {'k': rng.integers(-127, 128, (B, T, 2, 8)).astype(np.int8),
+               'v': rng.integers(-127, 128, (B, T, 2, 8)).astype(np.int8),
+               'k_scale': jnp.asarray(
+                   rng.random((B, T, 2), np.float32)).astype(jnp.bfloat16),
+               'v_scale': jnp.asarray(
+                   rng.random((B, T, 2), np.float32)).astype(jnp.bfloat16)}
+    upd = {nm: jnp.asarray(v) for nm, v in upd.items()}
+    tbl = jnp.asarray(table)
+
+    got = PM.fused_chunk_scatter(cache, upd, pos0, n_valid, tbl, Sc,
+                                 jnp.asarray(pending))
+    want = paged_scatter(_eager_clear(cache, pending[:3]), upd, pos0,
+                         n_valid, tbl, Sc)
+    assert set(got) == set(want)
+    for nm in want:
+        np.testing.assert_array_equal(np.asarray(got[nm]),
+                                      np.asarray(want[nm]), err_msg=nm)
+
+
+def test_cow_page_copy_bitwise():
+    """cow_page_copy == gather + masked pad, bit for bit — including rem=0
+    (pure clear), rem=ps (pure copy) and the pos leaf's -1 fill."""
+    NP, ps = 6, 8
+    rng = np.random.default_rng(3)
+    pool = {'k': jnp.asarray(rng.standard_normal((NP, ps, 2, 4),
+                                                 np.float32)),
+            'pos': jnp.asarray(rng.integers(0, 50, (NP, ps)).astype(
+                np.int32))}
+    sdr = jnp.asarray([[1, 2, 3], [4, 5, 0], [3, 1, ps]], jnp.int32)
+    for nm, leaf in pool.items():
+        fill = PM.leaf_fill(nm)
+        got = PM.cow_page_copy(leaf, sdr, fill=fill)
+        want = np.array(leaf)
+        for src, dst, rem in np.asarray(sdr):
+            row = want[src].copy()
+            row[rem:] = fill
+            want[dst] = row
+        np.testing.assert_array_equal(np.asarray(got), want, err_msg=nm)
+
+
+# ============================================== compiled-mode parity (-m compiled)
+@pytest.mark.compiled
+@pytest.mark.parametrize('quant', [False, True])
+def test_compiled_attend_matches_oracle_within_bound(quant):
+    """Platform-default compile (interpret=None -> ops._interpret): the
+    paged attend holds the documented PALLAS_TOL bound vs the gather
+    oracle. On TPU this is the compiled kernel the engine's 'auto' backend
+    serves with; CPU CI exercises the same assertions in interpret mode."""
+    B, KV, G, d, T, ps, window = 2, 2, 2, 16, 4, 8, 5
+    Sc = 11
+    P = -(-Sc // ps)
+    NP = 1 + B * P
+    table = np.arange(B * P).reshape(B, P).astype(np.int32) + 1
+    lengths = [Sc + 3, ps - 2]
+    k, v, ks, vs = _pool(1, NP, ps, KV, d, quant)
+    cpos = _fill_positions(NP, ps, table, lengths, Sc)
+    q = jax.random.normal(jax.random.PRNGKey(2), (B, T, KV, G, d))
+    pos0 = jnp.asarray([le - 1 for le in lengths], jnp.int32)
+    args = (q, k, v, cpos, jnp.asarray(table), pos0)
+    kw = dict(scale=d ** -0.5, window=window, k_scale_pages=ks,
+              v_scale_pages=vs)
+    got = paged_attention(*args, **kw)            # interpret by platform
+    want = ref.paged_attention_ref(*args, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **PALLAS_TOL)
+
+
+@pytest.mark.compiled
+def test_compiled_maintenance_stays_bitwise():
+    """Platform-default compile of the maintenance kernels: the bitwise
+    contract (no tolerance at all) must survive compilation — the one-hot
+    matmul scatter and the COW DMA round int8/int32/f32 exactly."""
+    B, T, ps, Sc = 2, 4, 8, 16
+    P = Sc // ps
+    NP = 1 + B * P + 1
+    table = np.arange(B * P).reshape(B, P).astype(np.int32) + 1
+    cache = _maint_pool(11, NP, ps, quant=False)
+    rng = np.random.default_rng(12)
+    upd = {'k': jnp.asarray(rng.standard_normal((B, T, 2, 8), np.float32)),
+           'v': jnp.asarray(rng.standard_normal((B, T, 2, 8), np.float32))}
+    pos0 = jnp.asarray([Sc - 1, 2], jnp.int32)
+    n_valid = jnp.asarray([T, T], jnp.int32)
+    pending = np.zeros(4, np.int32)
+    pending[0] = NP - 1
+    got = PM.fused_chunk_scatter(cache, upd, pos0, n_valid,
+                                 jnp.asarray(table), Sc,
+                                 jnp.asarray(pending))
+    want = paged_scatter(_eager_clear(cache, pending[:1]), upd, pos0,
+                         n_valid, jnp.asarray(table), Sc)
+    for nm in want:
+        np.testing.assert_array_equal(np.asarray(got[nm]),
+                                      np.asarray(want[nm]), err_msg=nm)
+
+
 # ================================================================ resolution
 def test_get_backend_resolution():
     assert get_backend(None) is REFERENCE
     assert get_backend('reference') is REFERENCE
     assert get_backend('pallas') is PALLAS
     assert get_backend(PALLAS) is PALLAS
+    assert get_backend('auto') is auto_backend()
+    # 'auto' is the platform pick: pallas where the kernels compile (TPU),
+    # reference where they would run interpreted
+    from repro.kernels.ops import _interpret
+    assert auto_backend() is (REFERENCE if _interpret() else PALLAS)
     assert set(BACKENDS) == {'reference', 'pallas'}
     with pytest.raises(ValueError):
         get_backend('nope')

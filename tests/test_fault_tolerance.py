@@ -207,6 +207,65 @@ def test_deadline_exceeded_marks_request_failed():
     assert stats['deadline_exceeded'] == 1
 
 
+def test_deadline_uses_monotonic_clock_not_wall_clock(monkeypatch):
+    """Deadline bookkeeping must run on ``time.monotonic()``: a wall-clock
+    step (NTP slew, manual reset, DST) can neither spuriously expire an
+    in-flight request nor immortalize one. Regression — the engine used
+    ``time.time()`` for submit/finish/deadline stamps, so the jumping wall
+    clock below used to kill a request with an hour of budget left."""
+    import time as real_time
+
+    from repro.serving import engine as E
+
+    class SkewedClock:
+        """time() leaps hours back and forth every call; monotonic() is
+        honest. Only differences of monotonic() may drive decisions."""
+
+        def __init__(self):
+            self.calls = 0
+
+        def time(self):
+            self.calls += 1
+            return 1.7e9 + (-86400.0 if self.calls % 2 else 7200.0)
+
+        def monotonic(self):
+            return real_time.monotonic()
+
+    model, params = _build('gqa')
+    clock = SkewedClock()
+    monkeypatch.setattr(E, 'time', clock)
+    eng = E.ServingEngine(model, params, max_slots=1, max_seq=MAX_SEQ,
+                          chunk_size=4)
+    req = Request(uid=0, prompt=_prompts(1)[0], max_new_tokens=4,
+                  deadline_s=3600.0)
+    eng.submit(req)
+    eng.run()
+    assert req.status is RequestStatus.FINISHED    # wall jumps are ignored
+    assert req.finish_t >= req.submit_t >= 0.0     # stamps stay ordered
+
+    class LateClock(SkewedClock):
+        """monotonic() advancing 10s per call: any deadline under that per
+        engine step must still fire, whatever time() claims."""
+
+        def __init__(self):
+            super().__init__()
+            self._mono = 50.0
+
+        def monotonic(self):
+            self._mono += 10.0
+            return self._mono
+
+    monkeypatch.setattr(E, 'time', LateClock())
+    eng2 = E.ServingEngine(model, params, max_slots=1, max_seq=MAX_SEQ,
+                           chunk_size=4)
+    late = Request(uid=0, prompt=_prompts(1)[0], max_new_tokens=8,
+                   deadline_s=5.0)
+    eng2.submit(late)
+    eng2.run()
+    assert late.status is RequestStatus.FAILED
+    assert late.error == 'deadline_exceeded'
+
+
 # --------------------------------------------------------------- watchdog
 @pytest.mark.chaos
 def test_nan_watchdog_fails_only_offending_lane():

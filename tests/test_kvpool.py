@@ -185,6 +185,82 @@ def test_pool_invariants_random_ops(ps, ops, data):
 
 
 @settings(max_examples=40, deadline=None)
+@given(ps=st.integers(1, 4), ops=st.lists(
+    st.tuples(st.integers(0, 3), st.integers(1, 16)),
+    min_size=1, max_size=25), data=st.data())
+def test_alloc_failure_is_atomic(ps, ops, data):
+    """A failed ``alloc(n)`` takes and evicts NOTHING: the free list, every
+    node's refcount, the radix structure and the LRU clocks are exactly as
+    before the call — interleaved with insert/attach/release/alloc traffic
+    and probed after every operation with the smallest doomed ask
+    (``reclaimable() + 1``). Regression: ``alloc`` used to evict one cold
+    block at a time until eviction ran dry, so a doomed over-ask still tore
+    cached prefixes out of the index before failing."""
+    kv = PrefixCache(num_pages=8, page_size=ps)
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 31),
+                                          label='seed'))
+    attached = []
+    loose = []
+
+    def snapshot():
+        nodes, stack = [], [kv.root]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            nodes.append((id(n), n.key, n.page, n.refs, n.last_used,
+                          tuple(sorted(id(c)
+                                       for c in n.children.values()))))
+        return (sorted(kv._free), kv.evictions, sorted(nodes))
+
+    for op, length in ops:
+        toks = rng.integers(0, 3, size=length)
+        if op == 0:
+            nb = len(toks) // ps
+            pages = kv.alloc(nb) if nb else None
+            if pages is not None:
+                _, transferred = kv.insert(toks, nb, pages)
+                kv.free([p for p in pages if p not in set(transferred)])
+        elif op == 1:
+            r = kv.match(toks)
+            if r.node is not None:
+                kv.attach(r.node)
+                attached.append(r.node)
+        elif op == 2 and attached:
+            kv.release(attached.pop())
+        else:
+            pages = kv.alloc(min(length, 3))
+            if pages is not None:
+                loose.extend(pages)
+        # the smallest ask that must fail, right at the eviction boundary
+        doomed = kv.reclaimable() + 1
+        before = snapshot()
+        assert kv.alloc(doomed) is None
+        assert snapshot() == before, 'failed alloc mutated the pool'
+        # and the boundary ask itself still succeeds (evicting if needed)
+        got = kv.alloc(doomed - 1)
+        assert got is not None and len(got) == doomed - 1
+        kv.free(got)
+
+
+def test_alloc_failure_is_atomic_seeded():
+    """Always-runs example of the atomicity property: a doomed alloc under
+    eviction pressure (cold cached blocks present, but not enough) leaves
+    evictions, the free list and the cached prefix untouched."""
+    kv = PrefixCache(num_pages=6, page_size=2)        # 5 usable pages
+    toks = np.arange(8)                               # 4 blocks
+    node = _insert_chain(kv, toks, 4)                 # 4 cached, 1 free
+    kv.attach(node)
+    kv.release(node)                                  # all 4 now evictable
+    free0, ev0 = kv.pages_free(), kv.evictions
+    assert kv.alloc(6) is None                        # > 5 reclaimable
+    assert kv.pages_free() == free0 and kv.evictions == ev0
+    assert kv.match(toks).n_blocks == 4               # prefix still cached
+    got = kv.alloc(5)                                 # boundary ask evicts
+    assert got is not None and kv.evictions == ev0 + 4
+    kv.free(got)
+
+
+@settings(max_examples=40, deadline=None)
 @given(ps=st.integers(1, 5), n=st.integers(1, 6), cut=st.integers(0, 40),
        data=st.data())
 def test_match_is_longest_prefix_property(ps, n, cut, data):
