@@ -48,10 +48,32 @@ import numpy as np
 from repro.config import MLAConfig, ModelConfig, SSMConfig
 from repro.models.model import Model
 from repro.serving import Request, ScriptedFaults, ServingEngine
+from repro.serving import telemetry as TM
 from repro.serving.engine import RequestStatus
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), 'BENCH_serving.json')
+
+
+def _phase_breakdown(eng: ServingEngine) -> Dict[str, Dict]:
+    """Per-phase step-latency summary read from the telemetry registry
+    (NOT re-derived with ad-hoc timers), keyed
+    ``backend -> step kind -> phase -> {n, mean_us, p50_us, p99_us}``.
+    Histograms are engine-lifetime cumulative, so this covers every step
+    the engine ran (warmup passes included)."""
+    out: Dict[str, Dict] = {}
+    for labels, hist in eng.telemetry.registry.find(TM.STEP_PHASE).items():
+        if not hist.count:
+            continue
+        lb = dict(labels)
+        d = out.setdefault(lb['backend'], {}).setdefault(lb['kind'], {})
+        d[lb['phase']] = {
+            'n': hist.count,
+            'mean_us': hist.mean * 1e6,
+            'p50_us': hist.percentile(50) * 1e6,
+            'p99_us': hist.percentile(99) * 1e6,
+        }
+    return out
 
 
 def _merge_json(section: str, payload: Dict) -> None:
@@ -82,14 +104,17 @@ def _bench_model(n_layers: int = 4):
 def _engine_run(model, params, *, precompute: bool = False,
                 chunk_size: int = 1, n_req: int = 8, prompt_len: int = 6,
                 new_tokens: int = 16, max_seq: int = 128,
-                repeats: int = 3) -> Dict[str, float]:
+                repeats: int = 3, telemetry: bool = False
+                ) -> Dict[str, float]:
     """Time ``repeats`` warm passes of the same workload and report the
     median-total pass — single-run numbers on a shared CPU are mostly
     scheduler noise, and BENCH_serving.json is read as a cross-PR
-    trajectory."""
+    trajectory. With ``telemetry`` the returned pass carries a
+    ``phase_breakdown`` read from the engine's metrics registry."""
     table = model.build_table(params) if precompute else None
     eng = ServingEngine(model, params, max_slots=4, max_seq=max_seq,
-                        precomputed=table, chunk_size=chunk_size)
+                        precomputed=table, chunk_size=chunk_size,
+                        telemetry=telemetry)
     # warmup jit (both the chunk and the single-token programs)
     w = Request(uid=-1, prompt=np.arange(max(4, chunk_size + 1)) + 3,
                 max_new_tokens=2)
@@ -121,6 +146,8 @@ def _engine_run(model, params, *, precompute: bool = False,
         })
     # lower-middle pass for even counts — never report the worse of two
     med = sorted(passes, key=lambda p: p['total_s'])[(len(passes) - 1) // 2]
+    if telemetry:
+        med['phase_breakdown'] = _phase_breakdown(eng)
     return med
 
 
@@ -145,7 +172,7 @@ def bench_serving_prompt_heavy(prompt_len: int = 96, new_tokens: int = 4,
     """Long prompts, short generations: TTFT, seed engine vs chunked."""
     model, params = _bench_model(n_layers)
     kw = dict(n_req=n_req, prompt_len=prompt_len, new_tokens=new_tokens,
-              max_seq=256, repeats=repeats)
+              max_seq=256, repeats=repeats, telemetry=True)
     seed_eng = _engine_run(model, params, chunk_size=1, **kw)
     chunked = _engine_run(model, params, chunk_size=chunk_size, **kw)
     chunked_pre = _engine_run(model, params, chunk_size=chunk_size,
@@ -238,7 +265,8 @@ def bench_shared_prefix(prefix_len: int = 128, tail_len: int = 8,
         assert a.generated == b.generated, \
             'prefix-cache hit tokens diverged from cold prefill'
     hs = hit['stats']
-    ttft_hit = hs['mean_ttft_on_hit_s'] or hs['mean_ttft_s']
+    # mean_ttft_on_hit_s is OMITTED (not 0.0) when no request hit the cache
+    ttft_hit = hs.get('mean_ttft_on_hit_s', hs['mean_ttft_s'])
     speedup = cold['mean_ttft_s'] / max(ttft_hit, 1e-9)
     if write_json:
         _merge_json('shared_prefix', {
@@ -250,10 +278,10 @@ def bench_shared_prefix(prefix_len: int = 128, tail_len: int = 8,
             'cold_mean_ttft_s': cold['mean_ttft_s'],
             'hit_mean_ttft_s': ttft_hit,
             'ttft_speedup_on_hit': speedup,
-            'prefix_hit_rate': hs['prefix_hit_rate'],
-            'prefix_hit_tokens': hs['prefix_hit_tokens'],
-            'pages_in_use': hs['pages_in_use'],
-            'evictions': hs['evictions'],
+            TM.KV_PREFIX_HIT_RATE: hs[TM.KV_PREFIX_HIT_RATE],
+            TM.KV_PREFIX_HIT_TOKENS: hs[TM.KV_PREFIX_HIT_TOKENS],
+            TM.KV_PAGES_IN_USE: hs[TM.KV_PAGES_IN_USE],
+            TM.KV_EVICTIONS: hs[TM.KV_EVICTIONS],
             'moe_token_drops': hs['moe_token_drops'],
         })
     return [
@@ -261,7 +289,7 @@ def bench_shared_prefix(prefix_len: int = 128, tail_len: int = 8,
          f'P={prefix_len}+{tail_len} chunk={chunk_size} cold prefill'),
         ('serving/shared_prefix_hit_ttft_us', ttft_hit * 1e6,
          f'prefix-cache hit speedup={speedup:.2f}x '
-         f"hit_rate={hs['prefix_hit_rate']:.2f}"),
+         f'hit_rate={hs[TM.KV_PREFIX_HIT_RATE]:.2f}'),
     ]
 
 
@@ -320,14 +348,19 @@ def bench_recurrent_mla(prompt_len: int = 96, new_tokens: int = 4,
 def bench_overload(n_req: int = 8, prompt_len: int = 40,
                    new_tokens: int = 16, chunk_size: int = 8,
                    page_size: int = 16, num_pages: int = 12,
-                   n_layers: int = 4, write_json: bool = True
-                   ) -> List[Tuple[str, float, str]]:
+                   n_layers: int = 4, write_json: bool = True,
+                   telemetry_dir: str = '') -> List[Tuple[str, float, str]]:
     """Overload + fault workload: aggregate KV demand exceeds the page
     pool, the request mix includes malformed and mid-run-cancelled
     requests, and the engine must still finish **100% of valid requests**
     via preemption — with every preempted request's tokens bit-identical
     to an uninterrupted dense-engine run. Doubles as the acceptance gate
-    for the fault-tolerance contract (any assertion here fails CI)."""
+    for the fault-tolerance contract (any assertion here fails CI).
+
+    Runs with telemetry enabled: the chaos run's Chrome trace is
+    round-tripped (export -> parse -> span lifecycle assertions) and, with
+    ``telemetry_dir``, the metrics registry (JSON + Prometheus text) and
+    the trace are written there as CI artifacts."""
     model, params = _bench_model(n_layers)
     max_seq = 128
     max_slots = 4
@@ -355,7 +388,7 @@ def bench_overload(n_req: int = 8, prompt_len: int = 40,
     eng = ServingEngine(model, params, max_slots=max_slots, max_seq=max_seq,
                         chunk_size=chunk_size, prefix_cache=True,
                         page_size=page_size, num_pages=num_pages,
-                        fault_injector=faults)
+                        fault_injector=faults, telemetry=True)
     reqs = mkreqs()
     invalid = [
         Request(uid=100, prompt=np.array([], np.int64),
@@ -384,9 +417,38 @@ def bench_overload(n_req: int = 8, prompt_len: int = 40,
     assert run_report['stalled'] == 0 and run_report['in_flight'] == 0
 
     completion_rate = sum(r.done for r in valid) / len(valid)
-    lat = sorted(r.finish_t - r.submit_t for r in valid)
-    p99 = float(np.percentile(lat, 99))
     stats = eng.stats(reqs)
+    # histogram-backed percentiles (engine-lifetime latency/TTFT histograms)
+    p99 = stats['p99_latency_s']
+
+    # Chrome-trace round trip: export -> parse -> assert every request's
+    # span lifecycle is reconstructible from the trace alone.
+    trace = json.loads(json.dumps(eng.telemetry.chrome_trace()))
+    by_uid: Dict[int, List[str]] = {}
+    for ev in trace['traceEvents']:
+        if ev.get('ph') == 'i' and ev['args'].get('uid') is not None:
+            by_uid.setdefault(ev['args']['uid'], []).append(ev['name'])
+    for r in valid:
+        seq = by_uid[r.uid]
+        assert seq[0] == TM.EV_SUBMIT and seq[-1] == TM.EV_FINISH, \
+            f'uid={r.uid}: trace span does not run SUBMIT..FINISH: {seq}'
+        if r.preemptions:
+            i = seq.index(TM.EV_PREEMPT)
+            assert TM.EV_RESUME in seq[i:], \
+                f'uid={r.uid}: PREEMPT without later RESUME in trace'
+    for r in dropped:
+        assert by_uid[r.uid][-1] == TM.EV_CANCEL
+    for r in invalid:
+        assert by_uid[r.uid][-1] == TM.EV_FAIL
+    trace_roundtrip_ok = True
+    if telemetry_dir:
+        os.makedirs(telemetry_dir, exist_ok=True)
+        eng.telemetry.write_json(os.path.join(telemetry_dir, 'metrics.json'))
+        eng.telemetry.write_prometheus(
+            os.path.join(telemetry_dir, 'metrics.prom'))
+        eng.telemetry.write_chrome_trace(
+            os.path.join(telemetry_dir, 'chaos_trace.json'))
+
     if write_json:
         _merge_json('robustness', {
             'workload': {'n_req': n_req, 'invalid': len(invalid),
@@ -403,10 +465,15 @@ def bench_overload(n_req: int = 8, prompt_len: int = 40,
             'failed': stats['failed'],
             'cancelled': stats['cancelled'],
             'deadline_exceeded': stats['deadline_exceeded'],
+            'p50_latency_s': stats['p50_latency_s'],
             'p99_latency_s': p99,
+            'p50_ttft_s': stats['p50_ttft_s'],
+            'p99_ttft_s': stats['p99_ttft_s'],
             'total_s': total_s,
             'engine_steps': eng.steps,
-            'bit_identical_to_dense': True,   # asserted above
+            'phase_breakdown': _phase_breakdown(eng),
+            'trace_roundtrip_ok': trace_roundtrip_ok,   # asserted above
+            'bit_identical_to_dense': True,             # asserted above
         })
     return [
         ('serving/overload_completion_rate', completion_rate,
@@ -553,7 +620,7 @@ def bench_bursty(n_req: int = 12, prefix_pool: int = 4,
                         max_new_tokens=new_tokens) for i in range(n_req)]
 
     kw = dict(max_slots=max_slots, max_seq=max_seq, chunk_size=chunk_size,
-              prefix_cache=True, page_size=page_size)
+              prefix_cache=True, page_size=page_size, telemetry=True)
     flat_eng = ServingEngine(model, params, **kw)
     pack_eng = ServingEngine(model, params, pack_prefill=True, **kw)
     assert pack_eng.pack_prefill
@@ -613,14 +680,16 @@ def bench_bursty(n_req: int = 12, prefix_pool: int = 4,
                          'lanes_dispatched': fs['lanes_dispatched'],
                          'lane_tokens': fs['lane_tokens'],
                          'prefill_lane_utilization':
-                             fs['prefill_lane_utilization']},
+                             fs['prefill_lane_utilization'],
+                         'phase_breakdown': _phase_breakdown(flat_eng)},
             'packed': {'mean_ttft_s': packed['mean_ttft_s'],
                        'total_s': packed['total_s'],
                        'engine_steps': ps['engine_steps'],
                        'lanes_dispatched': ps['lanes_dispatched'],
                        'lane_tokens': ps['lane_tokens'],
                        'prefill_lane_utilization':
-                           ps['prefill_lane_utilization']},
+                           ps['prefill_lane_utilization'],
+                       'phase_breakdown': _phase_breakdown(pack_eng)},
             'utilization_gain': ps['prefill_lane_utilization']
             / max(fs['prefill_lane_utilization'], 1e-9),
             'ttft_speedup': speedup,
@@ -648,6 +717,10 @@ if __name__ == '__main__':
                          'tracks the TTFT trajectory across PRs without '
                          'burning CI minutes (same BENCH_serving.json '
                          'schema)')
+    ap.add_argument('--telemetry-out', default='',
+                    help='directory for telemetry artifacts (overload '
+                         'workload only): metrics.json, metrics.prom, and '
+                         'the chaos-run Chrome trace chaos_trace.json')
     args = ap.parse_args()
     if args.workload == 'shared-prefix':
         if args.smoke:
@@ -682,9 +755,10 @@ if __name__ == '__main__':
         if args.smoke:
             rows = bench_overload(n_req=6, prompt_len=24, new_tokens=8,
                                   chunk_size=8, page_size=8, num_pages=10,
-                                  n_layers=2)
+                                  n_layers=2,
+                                  telemetry_dir=args.telemetry_out)
         else:
-            rows = bench_overload()
+            rows = bench_overload(telemetry_dir=args.telemetry_out)
     elif args.smoke:
         rows = bench_serving_prompt_heavy(prompt_len=48, new_tokens=2,
                                           chunk_size=16, n_req=3,

@@ -56,9 +56,11 @@ def run(precomputed, label, chunk_size=1):
     eng.run()
     dt = time.perf_counter() - t0
     toks = sum(len(r.generated) for r in reqs)
+    ttft = eng.stats(reqs).get('mean_ttft_s')   # omitted when no samples
+    ttft_str = f'{ttft * 1e3:.0f} ms' if ttft is not None else 'n/a'
     print(f'{label:16s}: {toks} tokens in {dt:.2f}s '
           f'({toks / dt:6.1f} tok/s), {eng.steps} engine steps, mean TTFT '
-          f'{eng.stats(reqs)["mean_ttft_s"] * 1e3:.0f} ms')
+          f'{ttft_str}')
     return [r.generated for r in reqs]
 
 

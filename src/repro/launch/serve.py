@@ -18,6 +18,13 @@ only the uncached tail — tokens across preempt/resume stay bit-identical
 to an uninterrupted run; ``--deadline`` bounds each request's wall clock;
 non-finite logits fail only the offending lane. ``run()`` reports
 preemptions / failed / cancelled / deadline_exceeded, printed below.
+
+Observability: ``--telemetry`` turns on the engine's metrics registry and
+per-request span tracer (host-side only, tokens stay bit-identical);
+``--metrics-out FILE`` dumps the registry as Prometheus text (``.prom``/
+``.txt``) or structured JSON, and ``--trace-out FILE`` writes a
+Chrome-trace-format span export (load in ``chrome://tracing`` or Perfetto).
+Both imply ``--telemetry``.
 """
 from __future__ import annotations
 
@@ -30,6 +37,7 @@ import numpy as np
 from repro.configs import ALL_IDS, get_smoke_config
 from repro.models.model import Model
 from repro.serving import Request, ServingEngine
+from repro.serving import telemetry as TM
 
 
 def main() -> None:
@@ -86,8 +94,21 @@ def main() -> None:
                          'enforced every engine step; an expired request '
                          'is FAILED("deadline_exceeded") and its slot '
                          'freed, the rest keep serving (0 = no deadline)')
+    ap.add_argument('--telemetry', action='store_true',
+                    help='enable the metrics registry + per-request span '
+                         'tracer (host-side; tokens stay bit-identical). '
+                         'Implied by --metrics-out / --trace-out')
+    ap.add_argument('--metrics-out', default='',
+                    help='write the metrics registry to this file: '
+                         'Prometheus exposition text for .prom/.txt, '
+                         'structured JSON otherwise')
+    ap.add_argument('--trace-out', default='',
+                    help='write request spans as Chrome trace-event JSON '
+                         '(chrome://tracing / Perfetto)')
     ap.add_argument('--seed', type=int, default=0)
     args = ap.parse_args()
+    want_telemetry = bool(args.telemetry or args.metrics_out
+                          or args.trace_out)
 
     cfg = get_smoke_config(args.arch)
     if cfg.arch_class in ('audio',):
@@ -108,7 +129,8 @@ def main() -> None:
                         prefix_cache=args.prefix_cache,
                         page_size=args.page_size,
                         num_pages=args.num_pages or None,
-                        attn_backend=args.attn_backend)
+                        attn_backend=args.attn_backend,
+                        telemetry=want_telemetry)
     if eng.chunk_size > 1:
         print(f'chunked prefill: {eng.chunk_size} tokens/dispatch'
               + (' + fused gather→RoPE' if eng.fused_gather_rope else ''))
@@ -137,6 +159,7 @@ def main() -> None:
                   f'mean token logprob={mean_lp:.3f}')
         toks = sum(len(p) for p in prompts)
         print(f'scored {len(prompts)} prompts ({toks} tokens) in {dt:.2f}s')
+        _write_exports(eng, args)
         return
     def mkprompt():
         p = rng.integers(3, cfg.vocab_size, size=int(rng.integers(4, 12)))
@@ -154,11 +177,18 @@ def main() -> None:
     dt = time.time() - t0
     stats = eng.stats(reqs)
     total_toks = stats['tokens']
+    def fmt(key: str) -> str:
+        # latency keys are OMITTED from stats() when no request produced a
+        # sample — print n/a, never a fake 0.000s
+        return f'{stats[key]:.3f}s' if key in stats else 'n/a'
+
     print(f'{stats["completed"]} requests, {total_toks} new tokens in '
           f'{dt:.2f}s -> {total_toks / dt:.1f} tok/s '
           f'(mode={"precompute" if table is not None else "baseline"})')
-    print(f'mean latency {stats["mean_latency_s"]:.3f}s, '
-          f'mean TTFT {stats["mean_ttft_s"]:.3f}s, '
+    print(f'mean latency {fmt("mean_latency_s")} '
+          f'(p50 {fmt("p50_latency_s")} / p99 {fmt("p99_latency_s")}), '
+          f'mean TTFT {fmt("mean_ttft_s")} '
+          f'(p50 {fmt("p50_ttft_s")} / p99 {fmt("p99_ttft_s")}), '
           f'engine steps {stats["engine_steps"]}, '
           f'MoE token drops {stats["moe_token_drops"]}')
     print(f'fault tolerance: {stats["preemptions"]} preemptions, '
@@ -166,12 +196,28 @@ def main() -> None:
           f'{stats["deadline_exceeded"]} deadline-exceeded, '
           f'{report["stalled"]} stalled')
     if eng.paged:
-        print(f'prefix cache: hit rate {stats["prefix_hit_rate"]:.2f} '
-              f'({stats["prefix_hits"]} hits / {stats["prefix_misses"]} '
-              f'misses, {stats["prefix_hit_tokens"]} tokens served from '
-              f'cache), TTFT on hit {stats["mean_ttft_on_hit_s"]:.3f}s, '
-              f'{stats["pages_in_use"]} pages in use, '
-              f'{stats["evictions"]} evictions')
+        print(f'prefix cache: hit rate {stats[TM.KV_PREFIX_HIT_RATE]:.2f} '
+              f'({stats[TM.KV_PREFIX_HITS]} hits / '
+              f'{stats[TM.KV_PREFIX_MISSES]} misses, '
+              f'{stats[TM.KV_PREFIX_HIT_TOKENS]} tokens served from '
+              f'cache), TTFT on hit {fmt("mean_ttft_on_hit_s")}, '
+              f'{stats[TM.KV_PAGES_IN_USE]} pages in use, '
+              f'{stats[TM.KV_EVICTIONS]} evictions')
+    _write_exports(eng, args)
+
+
+def _write_exports(eng: ServingEngine, args) -> None:
+    """Dump the telemetry registry / trace where --metrics-out / --trace-out
+    point. Prometheus text for .prom/.txt metric paths, JSON otherwise."""
+    if args.metrics_out:
+        if args.metrics_out.endswith(('.prom', '.txt')):
+            eng.telemetry.write_prometheus(args.metrics_out)
+        else:
+            eng.telemetry.write_json(args.metrics_out)
+        print(f'metrics -> {args.metrics_out}')
+    if args.trace_out:
+        eng.telemetry.write_chrome_trace(args.trace_out)
+        print(f'trace -> {args.trace_out}')
 
 
 if __name__ == '__main__':

@@ -3,6 +3,10 @@ from repro.serving.engine import (Request, RequestStatus, ScoringError,
 from repro.serving.faults import FaultInjector, ScriptedFaults
 from repro.serving.kvpool import PrefixCache
 from repro.serving.sampler import sample_tokens
+from repro.serving.telemetry import (NULL_TELEMETRY, Histogram,
+                                     MetricsRegistry, SpanTracer, Telemetry)
 
 __all__ = ['Request', 'RequestStatus', 'ScoringError', 'ServingEngine',
-           'PrefixCache', 'FaultInjector', 'ScriptedFaults', 'sample_tokens']
+           'PrefixCache', 'FaultInjector', 'ScriptedFaults', 'sample_tokens',
+           'Telemetry', 'NULL_TELEMETRY', 'Histogram', 'MetricsRegistry',
+           'SpanTracer']

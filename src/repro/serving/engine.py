@@ -149,6 +149,54 @@ a *per-request outcome* — the engine itself never dies on load:
   ``poison_lanes`` hooks deterministically force pool exhaustion, lane
   NaNs, and mid-flight cancels — the harness behind ``pytest -m chaos``
   and ``benchmarks/serving_throughput.py --workload overload``.
+
+Observability
+-------------
+``ServingEngine(telemetry=True)`` attaches a
+:class:`repro.serving.telemetry.Telemetry` recorder (or pass an existing
+instance to share one registry across engines). Everything below is
+host-side only — no jit'd code is touched, no device syncs are added, and
+every bit-identity contract holds with telemetry on or off (tested).
+
+**Phase taxonomy.** Each :meth:`step_once` dispatch is split into five
+named phases, observed into the ``engine.step.phase_s`` histogram family
+keyed by ``phase`` × ``backend`` (``reference``/``pallas``) × ``kind``
+(``prefill``/``decode``/``mixed`` — a step is *mixed* when some active
+lanes consume prompt tokens while others decode):
+
+- ``host_schedule`` — fault hooks, deadline sweep, admission, lane
+  building and preemption handling (radix time subtracted out);
+- ``radix_lookup`` — time inside ``PrefixCache.match`` during this step's
+  admissions (steps that admit but dispatch nothing drop their lookup
+  time — there is no kind to charge it to);
+- ``pack_layout`` — temps/pos/token staging and segment bin-packing;
+- ``dispatch`` — the jit call itself. XLA dispatch is asynchronous, so
+  this is *host enqueue cost*, not device compute;
+- ``sample_commit`` — the ``np.asarray`` host transfer (this is where the
+  device wait lands, keeping the kernel pipeline unsynced), token commit,
+  radix publish, terminations.
+
+**Metric names** live in exactly one place — constants in
+:mod:`repro.serving.telemetry`: ``engine.step.phase_s``,
+``request.latency_s``, ``request.ttft_s``, and the KV pool series
+(``pages_in_use``, ``pages_free``, ``pages_reclaimable`` gauges;
+``prefix_hits``/``misses``/``hit_tokens``, ``evictions``, ``cow_copies``
+counters) that also name the ``kvpool.stats()`` keys. Future PRs add
+metrics by defining a constant there first.
+
+**Request spans.** The tracer records one event stream per uid: SUBMIT →
+ADMIT (with ``prefix_hit_tokens``) → PREFILL_CHUNK per dispatch →
+FIRST_TOKEN → DECODE_STEP per token → FINISH/FAIL/CANCEL, with PREEMPT →
+RESUME pairs, COW/EVICT page events, and ``FAULT_*`` injections (uid
+``None``) interleaved — a chaos run is replayable from the trace alone.
+
+**Exports.** :meth:`metrics` returns the structured snapshot;
+``Telemetry.prometheus_text()`` / ``write_json`` dump the registry
+(``serve.py --metrics-out``); ``Telemetry.chrome_trace()`` emits
+Chrome-trace JSON (``chrome://tracing`` / Perfetto) with one track per
+request (``serve.py --trace-out``). Disabled mode is zero-cost: the
+shared ``NULL_TELEMETRY`` no-op recorder guards every site behind a
+single ``enabled`` bool — no clock reads, no per-step allocation.
 """
 from __future__ import annotations
 
@@ -165,6 +213,7 @@ from repro.kernels import paged_maintenance as PM
 from repro.models import attention as A
 from repro.models.model import Model
 from repro.models.transformer import lm_logits
+from repro.serving import telemetry as TM
 from repro.serving.faults import FaultInjector
 from repro.serving.kvpool import PrefixCache
 from repro.serving.sampler import sample_tokens
@@ -261,12 +310,40 @@ class ServingEngine:
                  attn_backend: str = 'auto',
                  fault_injector: Optional[FaultInjector] = None,
                  admit_retry_steps: int = 8,
-                 pack_prefill: bool = False):
+                 pack_prefill: bool = False,
+                 telemetry=False):
         from repro.models.attn_backend import get_backend
         self.model, self.params = model, params
         self.max_slots, self.max_seq = max_slots, max_seq
         self.precomputed = precomputed
         self.attn_backend = get_backend(attn_backend)
+        # ------------------------------------------------------ telemetry
+        # False/None -> the shared no-op singleton (zero-cost: every hot
+        # instrumentation site is guarded by `if tel.enabled`), True -> a
+        # fresh recorder, or pass an existing Telemetry to share one
+        # registry across engines.
+        self.telemetry = TM.coerce(telemetry)
+        tel = self.telemetry
+        # Engine-lifetime request latency/TTFT histograms back run()'s
+        # p50/p99 even with telemetry off (one observe per request
+        # lifetime, not a per-step cost); with telemetry on they are
+        # registry series and ride every export.
+        if tel.enabled:
+            self._lat_hist = tel.registry.histogram(TM.REQUEST_LATENCY)
+            self._ttft_hist = tel.registry.histogram(TM.REQUEST_TTFT)
+            self._cow_counter = tel.registry.counter(TM.KV_COW_COPIES)
+            self._phase_h = {
+                kind: {ph: tel.registry.histogram(
+                    TM.STEP_PHASE, phase=ph,
+                    backend=self.attn_backend.name, kind=kind)
+                    for ph in TM.PHASES}
+                for kind in TM.STEP_KINDS}
+        else:
+            self._lat_hist = TM.Histogram()
+            self._ttft_hist = TM.Histogram()
+            self._cow_counter = None
+            self._phase_h = None
+        self._t_radix = 0.0     # radix-lookup seconds within current step
         if model.cfg.arch_class == 'audio':
             chunk_size = 1   # enc-dec decode is one token per step by API
             if prefix_cache:
@@ -339,6 +416,8 @@ class ServingEngine:
                                  f'(null page + {self._pages_ring} ring '
                                  'pages + COW/linear headroom)')
             self.kv = PrefixCache(num_pages, page_size)
+            if tel.enabled:
+                self.kv.bind_telemetry(tel)
             self.num_pages = num_pages
         else:
             self._sc_ring = 0
@@ -673,12 +752,17 @@ class ServingEngine:
         among concurrent requests.
         """
         req.submit_t = time.monotonic()
+        tel = self.telemetry
         err = self._validate(req)
         if err is not None:
             req.status = RequestStatus.FAILED
             req.error = err
             req.finish_t = req.submit_t
             self.n_failed += 1
+            if tel.enabled:
+                tel.event(req.uid, TM.EV_SUBMIT, t=req.submit_t,
+                          prompt_len=len(req.prompt))
+                tel.event(req.uid, TM.EV_FAIL, t=req.finish_t, error=err)
             return
         if req.uid in self._live_uids:
             raise ValueError(f'uid {req.uid} is already live in this engine '
@@ -686,6 +770,9 @@ class ServingEngine:
         self._live_uids.add(req.uid)
         req.status = RequestStatus.QUEUED
         self.queue.append(req)
+        if tel.enabled:
+            tel.event(req.uid, TM.EV_SUBMIT, t=req.submit_t,
+                      prompt_len=len(req.prompt))
 
     def _next_internal_uid(self) -> int:
         """Engine-private uid for internally synthesized requests (scoring):
@@ -704,11 +791,25 @@ class ServingEngine:
         req.finish_t = time.monotonic()
         if status is RequestStatus.FINISHED:
             req.done = True
+            # Engine-lifetime histograms back run()'s p50/p99 regardless of
+            # telemetry mode — one observe per request lifetime.
+            self._lat_hist.observe(req.finish_t - req.submit_t)
+            if req.first_token_t is not None:
+                self._ttft_hist.observe(req.first_token_t - req.submit_t)
         elif status is RequestStatus.FAILED:
             self.n_failed += 1
         elif status is RequestStatus.CANCELLED:
             self.n_cancelled += 1
         self._live_uids.discard(req.uid)
+        tel = self.telemetry
+        if tel.enabled:
+            ev = {RequestStatus.FINISHED: TM.EV_FINISH,
+                  RequestStatus.FAILED: TM.EV_FAIL,
+                  RequestStatus.CANCELLED: TM.EV_CANCEL}[status]
+            attrs = {'generated': len(req.generated)}
+            if error is not None:
+                attrs['error'] = error
+            tel.event(req.uid, ev, t=req.finish_t, **attrs)
 
     def _vacate(self, slot: int) -> None:
         """Free one slot's scheduling state (and pages, in paged mode)."""
@@ -844,8 +945,14 @@ class ServingEngine:
         P = len(prompt)
         node, nblocks, pages = None, 0, []
         if not req.return_logits and P > 1:
-            res = self.kv.match(prompt, max_tokens=P - 1,
-                                need_snapshot=self._needs_snapshot)
+            if self.telemetry.enabled:
+                _r0 = self.telemetry.now()
+                res = self.kv.match(prompt, max_tokens=P - 1,
+                                    need_snapshot=self._needs_snapshot)
+                self._t_radix += self.telemetry.now() - _r0
+            else:
+                res = self.kv.match(prompt, max_tokens=P - 1,
+                                    need_snapshot=self._needs_snapshot)
             node, nblocks, pages = res.node, res.n_blocks, res.pages
         # pin the match before any allocation can trigger eviction
         self.kv.attach(node)
@@ -871,6 +978,11 @@ class ServingEngine:
                         self.states, jnp.int32(src), jnp.int32(alloc[0]),
                         jnp.int32(tail_len))
                     cow_page = alloc[0]
+                    if self.telemetry.enabled:
+                        self._cow_counter.inc()
+                        self.telemetry.event(
+                            req.uid, TM.EV_COW, src_page=int(src),
+                            dst_page=int(alloc[0]), rows=int(tail_len))
                     eff += tail_len
                     if self._fused_maint and alloc[0] in self._pending_clear:
                         # the COW kernel just wrote dst in full (copied
@@ -1001,6 +1113,11 @@ class ServingEngine:
         used when a slot yields to pool contention, so the surviving
         (protected) request gets room to run instead of thrashing."""
         req = self.slot_req[slot]
+        if self.telemetry.enabled:
+            self.telemetry.event(
+                req.uid, TM.EV_PREEMPT, slot=slot,
+                pos=int(self.slot_pos[slot]),
+                generated=len(req.generated), hold=bool(hold))
         if self.paged:
             self._publish_preempted(slot)
         self._vacate(slot)
@@ -1119,6 +1236,12 @@ class ServingEngine:
                 self._admit_seq += 1
                 req.status = RequestStatus.PREFILLING
                 req._admit_fails = 0
+                if self.telemetry.enabled:
+                    self.telemetry.event(
+                        req.uid,
+                        TM.EV_RESUME if req.preemptions else TM.EV_ADMIT,
+                        slot=slot,
+                        prefix_hit_tokens=int(req.prefix_hit_tokens))
 
     def _admit_with_retry(self, slot: int, req: Request,
                           stream: np.ndarray) -> bool:
@@ -1215,6 +1338,11 @@ class ServingEngine:
 
     def step_once(self) -> None:
         self.ticks += 1
+        tel = self.telemetry
+        obs = tel.enabled
+        if obs:
+            self._t_radix = 0.0
+            _t0 = tel.now()
         if self.fault_injector is not None:
             self.fault_injector.before_step(self)
         self._check_deadlines()
@@ -1291,6 +1419,17 @@ class ServingEngine:
             if prefilling and max(int(n_valid[s]) for s in active) <= 1:
                 prefilling = False
                 tokens = tokens[:, :1]
+            if obs:
+                n_pre = 0
+                for s in active:
+                    p = self._progress(s)
+                    if p < len(self.slot_stream[s]):
+                        n_pre += 1
+                        tel.event(self.slot_req[s].uid, TM.EV_PREFILL_CHUNK,
+                                  step=step_idx, pos=p, n=int(n_valid[s]))
+                kind = ('mixed' if 0 < n_pre < len(active)
+                        else ('prefill' if n_pre else 'decode'))
+                _t1 = tel.now()
             temps = jnp.asarray([
                 (self.slot_req[s].temperature if self.slot_req[s] else 0.0)
                 for s in range(self.max_slots)], jnp.float32)
@@ -1305,6 +1444,8 @@ class ServingEngine:
                 if self.paged:
                     args += [jnp.asarray(self._pt), jnp.asarray(self._rt),
                              self._pending_array()]
+                if obs:
+                    _t2 = tel.now()
                 if want_logits:
                     self.states, nxt, drops, finite, logits = \
                         self._packed_step_logits(*args)
@@ -1319,6 +1460,8 @@ class ServingEngine:
                 if self.paged:
                     args += [jnp.asarray(self._pt), jnp.asarray(self._rt),
                              self._pending_array()]
+                if obs:
+                    _t2 = tel.now()
                 if want_logits:
                     self.states, nxt, drops, finite, logits = \
                         self._chunk_step_logits(*args)
@@ -1327,6 +1470,17 @@ class ServingEngine:
                 self._pending_clear = []
             consumed = n_valid
         else:
+            if obs:
+                n_pre = 0
+                for s in active:
+                    p = self._progress(s)
+                    if p < len(self.slot_stream[s]):
+                        n_pre += 1
+                        tel.event(self.slot_req[s].uid, TM.EV_PREFILL_CHUNK,
+                                  step=step_idx, pos=p, n=1)
+                kind = ('mixed' if 0 < n_pre < len(active)
+                        else ('prefill' if n_pre else 'decode'))
+                _t1 = tel.now()
             temps = jnp.asarray([
                 (self.slot_req[s].temperature if self.slot_req[s] else 0.0)
                 for s in range(self.max_slots)], jnp.float32)
@@ -1337,6 +1491,8 @@ class ServingEngine:
                  for s in range(self.max_slots)], bool))
             args = (self.params, self.states, tokens, pos, sub, temps,
                     lane_valid)
+            if obs:
+                _t2 = tel.now()
             if want_logits:
                 self.states, nxt, drops, finite, logits = \
                     self._step_logits(*args)
@@ -1344,6 +1500,8 @@ class ServingEngine:
                 self.states, nxt, drops, finite = self._step(*args)
             consumed = np.ones(self.max_slots, np.int32)
 
+        if obs:
+            _t3 = tel.now()
         nxt = np.asarray(nxt)
         bad = ~np.asarray(finite)
         if self.fault_injector is not None:
@@ -1393,6 +1551,12 @@ class ServingEngine:
             tok = int(nxt[s])
             if not req.generated:
                 req.first_token_t = time.monotonic()
+                if obs:
+                    tel.event(req.uid, TM.EV_FIRST_TOKEN,
+                              t=req.first_token_t, step=step_idx, token=tok)
+            elif obs:
+                tel.event(req.uid, TM.EV_DECODE_STEP,
+                          step=step_idx, token=tok)
             req.generated.append(tok)
             self.slot_next_tok[s] = tok
             hit_eos = req.eos_id is not None and tok == req.eos_id
@@ -1400,6 +1564,18 @@ class ServingEngine:
                     or int(self.slot_pos[s]) + 1 >= self.max_seq:
                 self._vacate(s)
                 self._terminate(req, RequestStatus.FINISHED)
+        if obs:
+            # Phase accounting for this dispatch (see the Observability
+            # section of the module docstring for the taxonomy). The device
+            # wait lands in sample_commit via the np.asarray(nxt) transfer;
+            # no sync points are added.
+            _t4 = tel.now()
+            ph = self._phase_h[kind]
+            ph['host_schedule'].observe(max(0.0, _t1 - _t0 - self._t_radix))
+            ph['radix_lookup'].observe(self._t_radix)
+            ph['pack_layout'].observe(_t2 - _t1)
+            ph['dispatch'].observe(_t3 - _t2)
+            ph['sample_commit'].observe(_t4 - _t3)
 
     def run(self, max_iters: int = 100_000) -> Dict[str, int]:
         """Drive the engine until all submitted work reaches a terminal
@@ -1422,7 +1598,7 @@ class ServingEngine:
                 stalled += 1
             self.queue = []
             self.n_stalled += stalled
-        return {
+        out = {
             'iters': it,
             'stalled': stalled,
             'in_flight': sum(r is not None for r in self.slot_req),
@@ -1431,6 +1607,16 @@ class ServingEngine:
             'cancelled': self.n_cancelled,
             'deadline_exceeded': self.n_deadline,
         }
+        # Histogram-backed request percentiles over the engine lifetime
+        # (keys omitted until at least one request finished — a missing key
+        # is "no samples", never a fake 0.0).
+        if self._lat_hist.count:
+            out['p50_latency_s'] = self._lat_hist.percentile(50)
+            out['p99_latency_s'] = self._lat_hist.percentile(99)
+        if self._ttft_hist.count:
+            out['p50_ttft_s'] = self._ttft_hist.percentile(50)
+            out['p99_ttft_s'] = self._ttft_hist.percentile(99)
+        return out
 
     def score(self, prompts: List[np.ndarray]) -> List[np.ndarray]:
         """Logits-on-demand for prompt-scoring workloads: run each prompt
@@ -1465,7 +1651,18 @@ class ServingEngine:
         return [r.prompt_logits for r in reqs]
 
     # ------------------------------------------------------------- metrics
+    def metrics(self) -> Dict:
+        """Structured snapshot of the telemetry registry: counters, gauges,
+        and histogram summaries (count/sum/mean/min/max/p50/p90/p99 +
+        nonzero buckets). ``{'enabled': False}`` when telemetry is off."""
+        return self.telemetry.snapshot()
+
     def stats(self, requests: List[Request]) -> Dict[str, float]:
+        """Aggregate serving statistics over ``requests`` plus engine
+        lifetime counters. Latency/TTFT summary keys
+        (``mean_/p50_/p99_{latency,ttft}_s`` and ``..._ttft_on_hit_s``) are
+        OMITTED when their sample set is empty — a missing key means "no
+        samples", never a fake 0.0 (consumers print n/a)."""
         done = [r for r in requests if r.done]
         toks = sum(len(r.generated) for r in done)
         lat = [r.finish_t - r.submit_t for r in done]
@@ -1475,8 +1672,6 @@ class ServingEngine:
                     if r.first_token_t and r.prefix_hit_tokens]
         out = {
             'completed': len(done), 'tokens': toks,
-            'mean_latency_s': float(np.mean(lat)) if lat else 0.0,
-            'mean_ttft_s': float(np.mean(ttft)) if ttft else 0.0,
             'engine_steps': self.steps,
             'moe_token_drops': self.moe_token_drops,
             # chunk-grid utilization (segment-packed prefill win metric)
@@ -1492,8 +1687,9 @@ class ServingEngine:
             'deadline_exceeded': self.n_deadline,
             'stalled': self.n_stalled,
         }
+        out.update(TM.latency_summary('latency_s', lat))
+        out.update(TM.latency_summary('ttft_s', ttft))
         if self.kv is not None:
             out.update(self.kv.stats())
-            out['mean_ttft_on_hit_s'] = float(np.mean(hit_ttft)) \
-                if hit_ttft else 0.0
+            out.update(TM.latency_summary('ttft_on_hit_s', hit_ttft))
         return out

@@ -23,10 +23,17 @@ dispatching nothing (``engine.steps`` freezes then, and a restore keyed on
 it could never fire). Lane poisoning keys on ``engine.steps`` because a
 poisoned dispatch *is* a dispatch. Both counters are deterministic for a
 fixed engine configuration and workload, so scripts replay identically.
+
+Every scripted injection also lands in the engine's telemetry trace (uid
+``None`` — engine-scope events ``FAULT_STEAL_PAGES`` / ``FAULT_RESTORE`` /
+``FAULT_CANCEL`` / ``FAULT_POISON``) when telemetry is enabled, so a chaos
+run is replayable from its trace alone.
 """
 from __future__ import annotations
 
 from typing import Dict, Iterable, List, Sequence
+
+from repro.serving import telemetry as TM
 
 
 class FaultInjector:
@@ -76,10 +83,14 @@ class ScriptedFaults(FaultInjector):
         self.stolen: List[int] = []
 
     def before_step(self, engine) -> None:
+        tel = engine.telemetry
         tick = engine.ticks
         if tick in self.restore_pages_at:
             self.restore_pages_at.discard(tick)
+            n_back = len(self.stolen)
             self.release_stolen(engine)
+            if tel.enabled and n_back:
+                tel.event(None, TM.EV_FAULT_RESTORE, tick=tick, pages=n_back)
         n = self.steal_pages.pop(tick, 0)
         if n and engine.kv is not None:
             got = engine.kv.alloc(n)
@@ -88,11 +99,20 @@ class ScriptedFaults(FaultInjector):
                 got = engine.kv.alloc(n)
             if got:
                 self.stolen.extend(got)
+                if tel.enabled:
+                    tel.event(None, TM.EV_FAULT_STEAL, tick=tick,
+                              pages=len(got))
         for uid in self.cancel_uids.pop(tick, ()):
+            if tel.enabled:
+                tel.event(None, TM.EV_FAULT_CANCEL, tick=tick, req_uid=uid)
             engine.cancel(uid)
 
     def poison_lanes(self, engine, step_idx: int) -> Sequence[int]:
-        return self.nan_lanes.pop(step_idx, ())
+        lanes = self.nan_lanes.pop(step_idx, ())
+        if lanes and engine.telemetry.enabled:
+            engine.telemetry.event(None, TM.EV_FAULT_POISON, step=step_idx,
+                                   lanes=list(lanes))
+        return lanes
 
     def release_stolen(self, engine) -> None:
         """Return every stolen page to the pool."""

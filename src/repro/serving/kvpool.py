@@ -41,6 +41,9 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.serving import telemetry as TM
+from repro.serving.telemetry import NULL_TELEMETRY
+
 NULL_PAGE = 0     # physical page 0 is reserved: all-zero K/V, pos == -1
 
 
@@ -85,6 +88,23 @@ class PrefixCache:
         self.misses = 0
         self.hit_tokens = 0
         self.evictions = 0
+        self._tel = NULL_TELEMETRY
+
+    def bind_telemetry(self, tel) -> None:
+        """Register this pool's occupancy gauges and counters on ``tel``'s
+        registry (callback gauges — exports read live pool state) and route
+        eviction trace events through its tracer. Metric names are the
+        ``KV_*`` constants in :mod:`repro.serving.telemetry` — the same
+        strings :meth:`stats` uses, defined in exactly one place."""
+        self._tel = tel
+        reg = tel.registry
+        reg.gauge(TM.KV_PAGES_IN_USE, fn=self.pages_in_use)
+        reg.gauge(TM.KV_PAGES_FREE, fn=self.pages_free)
+        reg.gauge(TM.KV_PAGES_RECLAIMABLE, fn=self.reclaimable)
+        reg.gauge(TM.KV_PREFIX_HITS, fn=lambda: self.hits)
+        reg.gauge(TM.KV_PREFIX_MISSES, fn=lambda: self.misses)
+        reg.gauge(TM.KV_PREFIX_HIT_TOKENS, fn=lambda: self.hit_tokens)
+        reg.gauge(TM.KV_EVICTIONS, fn=lambda: self.evictions)
 
     # ------------------------------------------------------------ allocator
     def pages_free(self) -> int:
@@ -148,6 +168,9 @@ class PrefixCache:
         victim.snapshot = None
         self.free([victim.page])
         self.evictions += 1
+        if self._tel.enabled:
+            self._tel.event(None, TM.EV_EVICT, page=int(victim.page),
+                            depth=victim.depth)
         return True
 
     # ---------------------------------------------------------------- radix
@@ -265,14 +288,18 @@ class PrefixCache:
 
     # ---------------------------------------------------------------- stats
     def stats(self) -> Dict[str, float]:
+        """Pool statistics. Key names are the ``KV_*`` constants in
+        :mod:`repro.serving.telemetry` — the single place they are
+        defined (the registry gauges from :meth:`bind_telemetry` and
+        every consumer use the same constants)."""
         total = self.hits + self.misses
         return {
-            'prefix_hits': self.hits,
-            'prefix_misses': self.misses,
-            'prefix_hit_rate': self.hits / total if total else 0.0,
-            'prefix_hit_tokens': self.hit_tokens,
-            'pages_in_use': self.pages_in_use(),
-            'pages_free': self.pages_free(),
-            'pages_reclaimable': self.reclaimable(),
-            'evictions': self.evictions,
+            TM.KV_PREFIX_HITS: self.hits,
+            TM.KV_PREFIX_MISSES: self.misses,
+            TM.KV_PREFIX_HIT_RATE: self.hits / total if total else 0.0,
+            TM.KV_PREFIX_HIT_TOKENS: self.hit_tokens,
+            TM.KV_PAGES_IN_USE: self.pages_in_use(),
+            TM.KV_PAGES_FREE: self.pages_free(),
+            TM.KV_PAGES_RECLAIMABLE: self.reclaimable(),
+            TM.KV_EVICTIONS: self.evictions,
         }
