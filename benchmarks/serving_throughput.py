@@ -29,6 +29,12 @@ Three workloads:
   of the paged engine under ``attn_backend='reference'`` vs ``'pallas'``
   (in-place attend + fused in-kernel maintenance) on the prompt-heavy and
   shared-prefix workloads, tokens asserted identical across backends.
+- **sustained** (sharded many-slot async-loop target): tokens/s of a
+  hundreds-of-slots paged engine with the async double-buffered host loop
+  at queue depths {1, 8, 64, 256}, the overlap fraction (host scheduling
+  time hidden behind device compute, from the telemetry registry), and an
+  emulated ``('pool','heads')`` mesh vs single-device row with tokens
+  asserted bitwise identical. CPU rows are interpret/emulation-labelled.
 
 Each workload merges its section into ``BENCH_serving.json`` (repo root)
 so the perf trajectory is machine-readable across PRs:
@@ -39,8 +45,27 @@ from __future__ import annotations
 
 import json
 import os
+import sys
 import time
 from typing import Dict, List, Tuple
+
+# The sustained workload times an emulated device mesh; the host-platform
+# device count must be in XLA_FLAGS before jax initialises its backend, so
+# peek at argv before the jax import (argparse runs far too late).
+if 'sustained' in sys.argv or '--mesh' in sys.argv:
+    _need = 4
+    if '--mesh' in sys.argv:
+        try:
+            _spec = sys.argv[sys.argv.index('--mesh') + 1]
+            _p, _h = _spec.lower().replace('×', 'x').split('x')
+            _need = max(_need, int(_p) * int(_h))
+        except (IndexError, ValueError):
+            pass
+    _flags = os.environ.get('XLA_FLAGS', '')
+    if 'xla_force_host_platform_device_count' not in _flags:
+        os.environ['XLA_FLAGS'] = (
+            _flags + f' --xla_force_host_platform_device_count={_need}'
+        ).strip()
 
 import jax
 import numpy as np
@@ -705,13 +730,180 @@ def bench_bursty(n_req: int = 12, prefix_pool: int = 4,
     ]
 
 
+def _overlap_sums(eng: ServingEngine) -> Tuple[float, float]:
+    """(overlapped host seconds, total host scheduling seconds) read from
+    the telemetry registry. Their ratio is the async loop's overlap
+    fraction: the share of host scheduling work (admission, radix lookups,
+    bin-packing) that ran *while the device computed the previous step*."""
+    reg = eng.telemetry.registry
+    ov = sum(h.total for h in reg.find(TM.STEP_OVERLAP).values())
+    host = sum(h.total for labels, h in reg.find(TM.STEP_PHASE).items()
+               if dict(labels)['phase'] in ('host_schedule', 'radix_lookup',
+                                            'pack_layout'))
+    return ov, host
+
+
+def bench_sustained(depths: Tuple[int, ...] = (1, 8, 64, 256),
+                    max_slots: int = 256, prompt_len: int = 6,
+                    new_tokens: int = 24, chunk_size: int = 8,
+                    page_size: int = 16, n_layers: int = 2,
+                    mesh: str = '2x2', mesh_depth: int = 8,
+                    write_json: bool = True
+                    ) -> List[Tuple[str, float, str]]:
+    """Sustained decode throughput of the many-slot async engine.
+
+    One paged engine with ``max_slots`` in the hundreds serves bursts at
+    increasing queue depth; pow2 slot bucketing keeps shallow depths from
+    paying the full slot width. Per depth: tokens/s and the double-buffered
+    loop's **overlap fraction** — overlapped host scheduling seconds over
+    total host scheduling seconds (``engine.step.overlap_s`` vs the
+    host_schedule/radix_lookup/pack_layout phases, both read from the
+    telemetry registry). A second pass times a cheap depth on an emulated
+    ``('pool','heads')`` device mesh vs single-device, with tokens asserted
+    bitwise identical. All CPU timings are interpret/emulation-mode rows —
+    trajectory data, not hardware-meaningful speedups; rows are labelled.
+    """
+    model, params = _bench_model(n_layers)
+    max_seq = 64
+    mode = 'compiled' if jax.default_backend() == 'tpu' else 'interpret'
+
+    def mkreqs(d: int, seed: int):
+        rng = np.random.default_rng(seed)
+        # lengths are staggered so completions (and hence closed-loop
+        # refill admissions) spread across ticks instead of synchronizing
+        return [Request(uid=seed * 1000 + i,
+                        prompt=rng.integers(3, 2000, size=prompt_len + i % 3),
+                        max_new_tokens=new_tokens + i % 7) for i in range(d)]
+
+    eng = ServingEngine(model, params, max_slots=max_slots, max_seq=max_seq,
+                        chunk_size=chunk_size, prefix_cache=True,
+                        page_size=page_size, telemetry=True, async_loop=True)
+    # warm every pow2 slot bucket the depths will hit (trace, then time)
+    for d in sorted(set(depths)):
+        for r in mkreqs(min(d, max_slots), 900 + d):
+            eng.submit(r)
+        eng.run()
+
+    def closed_loop(d: int, seed: int):
+        """Serve ``2*d`` requests at a held queue depth of ``d``: a
+        finished request is immediately replaced, so admissions spread
+        over the run and overlap in-flight compute — the sustained regime.
+        The initial window also ramps up over a few ticks (rather than one
+        all-upfront burst, which would put every admission in a single tick
+        with nothing yet in flight to overlap)."""
+        reqs = mkreqs(2 * max(d, 4), seed)
+        it = iter(reqs)
+        live: List[Request] = []
+        ramp = max(1, d // 8)           # initial-window submissions per tick
+        exhausted = False
+        while True:
+            added = 0
+            while len(live) < d and added < ramp and not exhausted:
+                nxt = next(it, None)
+                if nxt is None:
+                    exhausted = True
+                    break
+                eng.submit(nxt)
+                live.append(nxt)
+                added += 1
+            eng.step_once()
+            for r in live[:]:
+                if r.terminal:
+                    live.remove(r)
+            if exhausted and not live and not eng.queue:
+                break
+        eng.run()                        # drain the one-step pipeline
+        return reqs
+
+    rows: List[Tuple[str, float, str]] = []
+    by_depth: Dict[str, Dict] = {}
+    # overall fraction sums the timed passes' deltas only — the registry is
+    # engine-lifetime cumulative and the warmup passes' jit compile time
+    # lands in host_schedule, which would drown the steady-state signal
+    ov_sum = host_sum = 0.0
+    for d in depths:
+        ov0, host0 = _overlap_sums(eng)
+        t0 = time.perf_counter()
+        reqs = closed_loop(d, d)
+        dt = time.perf_counter() - t0
+        ov1, host1 = _overlap_sums(eng)
+        toks = sum(len(r.generated) for r in reqs)
+        frac = (ov1 - ov0) / max(host1 - host0, 1e-12)
+        ov_sum += ov1 - ov0
+        host_sum += host1 - host0
+        by_depth[str(d)] = {'tokens_per_s': toks / dt, 'total_s': dt,
+                            'new_tokens': toks, 'n_req': len(reqs),
+                            'overlap_fraction': frac}
+        rows.append((f'serving/sustained_d{d}_tokens_per_s', toks / dt,
+                     f'depth={d} async overlap={frac:.2f} ({mode})'))
+    overall = ov_sum / max(host_sum, 1e-12)
+
+    # emulated mesh vs single device at one cheap depth, tokens bitwise
+    mesh_rows: Dict[str, Dict] = {}
+    mesh_toks: Dict[str, list] = {}
+    for mspec in ('1x1', mesh):
+        try:
+            meng = ServingEngine(model, params,
+                                 max_slots=max(mesh_depth, 8),
+                                 max_seq=max_seq, chunk_size=chunk_size,
+                                 prefix_cache=True, page_size=page_size,
+                                 telemetry=True, async_loop=True,
+                                 mesh=None if mspec == '1x1' else mspec)
+        except ValueError as e:      # not enough visible devices
+            mesh_rows[mspec] = {'skipped': str(e)}
+            continue
+        for r in mkreqs(mesh_depth, 700):
+            meng.submit(r)
+        meng.run()                   # warm
+        reqs = mkreqs(mesh_depth, 701)
+        t0 = time.perf_counter()
+        for r in reqs:
+            meng.submit(r)
+        meng.run()
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.generated) for r in reqs)
+        mesh_toks[mspec] = [r.generated for r in reqs]
+        mesh_rows[mspec] = {'tokens_per_s': toks / dt, 'total_s': dt,
+                            'depth': mesh_depth,
+                            'mode': mode if mspec == '1x1'
+                            else f'emulated ({mode})'}
+        rows.append((f'serving/sustained_mesh_{mspec}_tokens_per_s',
+                     toks / dt,
+                     f'depth={mesh_depth} mesh={mspec} '
+                     f'({mesh_rows[mspec]["mode"]})'))
+    if '1x1' in mesh_toks and mesh in mesh_toks:
+        assert mesh_toks['1x1'] == mesh_toks[mesh], \
+            'mesh engine tokens diverged from single-device (bitwise broken)'
+
+    if write_json:
+        _merge_json('sustained', {
+            'workload': {'depths': list(depths), 'max_slots': max_slots,
+                         'prompt_len': prompt_len, 'new_tokens': new_tokens,
+                         'chunk_size': chunk_size, 'page_size': page_size,
+                         'mesh': mesh, 'mesh_depth': mesh_depth,
+                         'mode': mode,
+                         'model': f'{n_layers}L d=256 fp32 CPU'},
+            'by_depth': by_depth,
+            'overlap_fraction': overall,
+            'mesh_rows': mesh_rows,
+            'bit_identical_mesh': '1x1' in mesh_toks and mesh in mesh_toks,
+        })
+    return rows
+
+
 if __name__ == '__main__':
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument('--workload', default='prompt-heavy',
                     choices=['prompt-heavy', 'shared-prefix',
                              'recurrent-mla', 'overload', 'bursty',
-                             'pallas-compiled'])
+                             'pallas-compiled', 'sustained'])
+    ap.add_argument('--max-slots', type=int, default=0,
+                    help='sustained workload: engine slot count (0 = the '
+                         'workload default; smoke 64, full 256)')
+    ap.add_argument('--mesh', default='',
+                    help='sustained workload: emulated serving mesh "PxH" '
+                         'for the mesh comparison row (default 2x2)')
     ap.add_argument('--smoke', action='store_true',
                     help='small CI workload: 2 layers, short prompts — '
                          'tracks the TTFT trajectory across PRs without '
@@ -751,6 +943,15 @@ if __name__ == '__main__':
                                          repeats=2)
         else:
             rows = bench_pallas_compiled()
+    elif args.workload == 'sustained':
+        if args.smoke:
+            rows = bench_sustained(depths=(1, 8, 64),
+                                   max_slots=args.max_slots or 64,
+                                   new_tokens=16, n_layers=2,
+                                   mesh=args.mesh or '2x2', mesh_depth=4)
+        else:
+            rows = bench_sustained(max_slots=args.max_slots or 256,
+                                   mesh=args.mesh or '2x2')
     elif args.workload == 'overload':
         if args.smoke:
             rows = bench_overload(n_req=6, prompt_len=24, new_tokens=8,

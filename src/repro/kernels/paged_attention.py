@@ -207,6 +207,78 @@ def paged_attention(q: jax.Array, k_pages: jax.Array,
     )(pos0.astype(jnp.int32), table.astype(jnp.int32), *operands)
 
 
+def sharded_paged_attention(q: jax.Array, k_pages: jax.Array,
+                            v_pages: jax.Array | None,
+                            cpos_pages: jax.Array, table: jax.Array,
+                            pos0: jax.Array, *, mesh, scale: float,
+                            window: int = 0,
+                            k2_pages: jax.Array | None = None,
+                            k_scale_pages: jax.Array | None = None,
+                            v_scale_pages: jax.Array | None = None,
+                            mla_split: int = 0,
+                            interpret: bool | None = None) -> jax.Array:
+    """Head-parallel :func:`paged_attention` over a ``('pool','heads')`` mesh.
+
+    The kernel grid already iterates ``(batch, kv_heads, pages)`` and every
+    kv head's running softmax is independent, so partitioning axis 2 of the
+    queries and the pools over the mesh's ``'heads'`` axis is embarrassingly
+    parallel: each device runs the *identical* kernel on ``KV / nh`` heads
+    and the results are concatenated. No reduction crosses the shard
+    boundary, which is what keeps the sharded output **bitwise identical**
+    to the single-device kernel — the contract the serving engine's parity
+    tests pin down.
+
+    Page tables and ``pos0`` are scalar-prefetch operands; they stay
+    replicated (device-local) on every shard. The ``'pool'`` mesh axis only
+    shards storage *at rest* — inside this call all operands are gathered
+    over ``'pool'`` (specs never mention it), and with ``check_rep=False``
+    the identical per-pool-shard outputs collapse back to one.
+
+    Falls back to the plain kernel when there is nothing to shard: no mesh,
+    a heads axis of size 1, MLA (``KV == 1`` latent head), or kv heads not
+    divisible by the heads axis.
+    """
+    if interpret is None:
+        from repro.kernels.ops import _interpret
+        interpret = _interpret()
+    nh = 1
+    if mesh is not None:
+        nh = dict(zip(mesh.axis_names, mesh.devices.shape)).get('heads', 1)
+    KV = q.shape[2]
+    if nh == 1 or mla_split or KV % nh:
+        return paged_attention(q, k_pages, v_pages, cpos_pages, table, pos0,
+                               scale=scale, window=window, k2_pages=k2_pages,
+                               k_scale_pages=k_scale_pages,
+                               v_scale_pages=v_scale_pages,
+                               mla_split=mla_split, interpret=interpret)
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    sc_spec = P(None, None, 'heads')
+    in_specs = [P(None, None, 'heads', None, None),    # q
+                P(None, None, 'heads', None),          # k pages
+                P(None, None, 'heads', None),          # v pages
+                P(None, None),                         # cpos (replicated)
+                P(None, None),                         # table (device-local)
+                P(None)]                               # pos0
+    operands = [q, k_pages, v_pages, cpos_pages, table.astype(jnp.int32),
+                pos0.astype(jnp.int32)]
+    if k_scale_pages is not None:
+        in_specs += [sc_spec, sc_spec]
+        operands += [k_scale_pages, v_scale_pages]
+
+    def body(q_, k_, v_, cp_, tab_, p0_, *scales):
+        ks, vs = scales if scales else (None, None)
+        return paged_attention(q_, k_, v_, cp_, tab_, p0_, scale=scale,
+                               window=window, k_scale_pages=ks,
+                               v_scale_pages=vs, interpret=interpret)
+
+    return shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                     out_specs=P(None, None, 'heads', None, None),
+                     check_rep=False)(*operands)
+
+
 def dense_page_split(Sc: int, max_page: int = 128) -> int:
     """Page size for viewing a dense (B, Sc, ...) cache as pages in place.
 

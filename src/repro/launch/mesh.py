@@ -28,6 +28,60 @@ def batch_axes(mesh) -> tuple:
     return ('pod', 'data') if 'pod' in mesh.axis_names else ('data',)
 
 
+def make_serving_mesh(spec, devices=None):
+    """Build (or pass through) the serving engine's ``('pool','heads')`` mesh.
+
+    ``spec`` accepts:
+      - ``None`` / ``''`` / ``'1x1'`` -> ``None`` (single-device engine, the
+        mesh machinery stays completely out of the hot path)
+      - ``'PxH'`` string (e.g. ``'2x2'``, ``'4x1'``) or a ``(P, H)`` tuple ->
+        a fresh ``jax.make_mesh((P, H), ('pool', 'heads'))``
+      - an existing ``jax.sharding.Mesh`` -> validated and returned as-is
+
+    Raises :class:`ValueError` (never asserts — these are user-facing CLI
+    inputs) on malformed specs, non-positive factors, or a device product
+    exceeding what the backend actually has. Emulated CPU meshes need
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set before jax
+    initialises its backend.
+    """
+    if spec is None or spec == '':
+        return None
+    if isinstance(spec, jax.sharding.Mesh):
+        names = tuple(spec.axis_names)
+        if names != ('pool', 'heads'):
+            raise ValueError(f'serving mesh needs axes (pool, heads), got '
+                             f'{names}')
+        return spec
+    if isinstance(spec, str):
+        parts = spec.lower().replace('×', 'x').split('x')
+        if len(parts) != 2:
+            raise ValueError(f'mesh spec must look like "PxH" (e.g. "2x2"), '
+                             f'got {spec!r}')
+        try:
+            shape = (int(parts[0]), int(parts[1]))
+        except ValueError:
+            raise ValueError(f'mesh spec must be two integers "PxH", got '
+                             f'{spec!r}') from None
+    else:
+        shape = tuple(int(v) for v in spec)
+        if len(shape) != 2:
+            raise ValueError(f'mesh shape must be (pool, heads), got {spec!r}')
+    p, h = shape
+    if p < 1 or h < 1:
+        raise ValueError(f'mesh factors must be positive, got {p}x{h}')
+    if p * h == 1:
+        return None
+    avail = devices if devices is not None else jax.devices()
+    if p * h > len(avail):
+        raise ValueError(
+            f'mesh {p}x{h} needs {p * h} devices but only {len(avail)} are '
+            f'visible (on CPU, set XLA_FLAGS='
+            f'--xla_force_host_platform_device_count={p * h} before jax '
+            f'initialises)')
+    return jax.make_mesh((p, h), ('pool', 'heads'),
+                         devices=list(avail)[:p * h])
+
+
 # models big enough that train-mode params/optimizer must be FSDP-sharded
 # over the data axis on top of tensor parallelism (ZeRO-3 style)
 FSDP_ARCHS = {'llama3-405b', 'gemma3-27b', 'glm4-9b', 'mixtral-8x7b',

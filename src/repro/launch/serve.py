@@ -45,6 +45,26 @@ def main() -> None:
     ap.add_argument('--arch', default='gemma3-1b')
     ap.add_argument('--requests', type=int, default=8)
     ap.add_argument('--slots', type=int, default=4)
+    ap.add_argument('--max-slots', type=int, default=0,
+                    help='override the engine slot count (0 = --slots). '
+                         'Large values are cheap to hold: dispatches are '
+                         'sliced to the smallest power-of-two bucket '
+                         'covering the active slots, so a 256-slot engine '
+                         'serving 3 requests traces/pays an 8-wide step')
+    ap.add_argument('--mesh', default='',
+                    help='serving device mesh "PxH" (pool x heads), e.g. '
+                         '"2x2". Shards KV pool storage over P devices and '
+                         'the pallas attend over H kv-head groups; tokens '
+                         'stay bitwise identical to the single-device '
+                         'engine. Empty / "1x1" = no mesh. On CPU the '
+                         'devices are emulated (host-platform device count '
+                         'is set automatically when possible). Impossible '
+                         'shapes raise ValueError, never assert')
+    ap.add_argument('--async-loop', action='store_true',
+                    help='double-buffered host loop: schedule step N+1 '
+                         'while the device runs step N; sampling commits '
+                         'one step late (greedy tokens stay bitwise '
+                         'identical to the synchronous loop)')
     ap.add_argument('--new-tokens', type=int, default=24)
     ap.add_argument('--max-seq', type=int, default=256)
     ap.add_argument('--temperature', type=float, default=0.0)
@@ -109,6 +129,8 @@ def main() -> None:
     args = ap.parse_args()
     want_telemetry = bool(args.telemetry or args.metrics_out
                           or args.trace_out)
+    if args.mesh:
+        _ensure_mesh_devices(args.mesh)
 
     cfg = get_smoke_config(args.arch)
     if cfg.arch_class in ('audio',):
@@ -122,7 +144,8 @@ def main() -> None:
         print(f'precomputed table: {table.table.shape} '
               f'({table.table.size * table.table.dtype.itemsize / 2**20:.1f} '
               f'MiB) built in {time.time() - t0:.2f}s')
-    eng = ServingEngine(model, params, max_slots=args.slots,
+    eng = ServingEngine(model, params,
+                        max_slots=args.max_slots or args.slots,
                         max_seq=args.max_seq, precomputed=table,
                         seed=args.seed, chunk_size=args.chunk_size,
                         fused_gather_rope=args.fused_gather_rope,
@@ -130,7 +153,15 @@ def main() -> None:
                         page_size=args.page_size,
                         num_pages=args.num_pages or None,
                         attn_backend=args.attn_backend,
-                        telemetry=want_telemetry)
+                        telemetry=want_telemetry,
+                        mesh=args.mesh or None,
+                        async_loop=args.async_loop)
+    if eng.mesh is not None:
+        sizes = dict(zip(eng.mesh.axis_names, eng.mesh.devices.shape))
+        print(f'serving mesh: {sizes["pool"]}x{sizes["heads"]} '
+              f'(pool x heads) over {eng.mesh.devices.size} devices')
+    if eng.async_loop:
+        print('async double-buffered host loop (one-step sampling lag)')
     if eng.chunk_size > 1:
         print(f'chunked prefill: {eng.chunk_size} tokens/dispatch'
               + (' + fused gather→RoPE' if eng.fused_gather_rope else ''))
@@ -204,6 +235,27 @@ def main() -> None:
               f'{stats[TM.KV_PAGES_IN_USE]} pages in use, '
               f'{stats[TM.KV_EVICTIONS]} evictions')
     _write_exports(eng, args)
+
+
+def _ensure_mesh_devices(spec: str) -> None:
+    """Emulated CPU meshes need ``--xla_force_host_platform_device_count``
+    in XLA_FLAGS before jax initialises its backend. argparse runs before
+    any device access, so a well-formed ``--mesh`` can set it here; a
+    malformed spec is left for ``make_serving_mesh`` to reject with its
+    proper ValueError."""
+    import os
+    parts = spec.lower().replace('×', 'x').split('x')
+    try:
+        need = 1
+        for p in parts:
+            need *= int(p)
+    except ValueError:
+        return
+    flags = os.environ.get('XLA_FLAGS', '')
+    if need > 1 and 'xla_force_host_platform_device_count' not in flags:
+        os.environ['XLA_FLAGS'] = (
+            flags + f' --xla_force_host_platform_device_count={need}'
+        ).strip()
 
 
 def _write_exports(eng: ServingEngine, args) -> None:

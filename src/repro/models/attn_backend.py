@@ -198,6 +198,50 @@ class PallasBackend(AttnBackend):
                           params['wuv'].astype(ctx_lat.dtype))
 
 
+# ================================================================= sharded
+class ShardedPallasBackend(PallasBackend):
+    """Pallas backend whose chunk attend runs head-parallel over a
+    ``('pool', 'heads')`` serving mesh via
+    :func:`repro.kernels.paged_attention.sharded_paged_attention`.
+
+    Stateful (holds the mesh), so it is **not** registered in
+    :data:`BACKENDS` — the serving engine constructs one when both a mesh
+    and the pallas backend are requested. Fused maintenance stays off:
+    maintenance kernels scatter into the pool whose storage is sharded over
+    ``'pool'``, and the one-pass job-list kernel has no sharded variant;
+    the engine falls back to the XLA scatter path (which GSPMD handles).
+
+    MLA keeps the parent's single-device attend: its latent ``KV == 1``
+    head cannot shard, and :func:`sharded_paged_attention` would fall back
+    anyway.
+    """
+
+    fused_maintenance = False
+
+    def __init__(self, mesh):
+        self.mesh = mesh
+
+    def attend_chunk(self, q, cache, pos0, cfg, *, rope_theta, window=0,
+                     rope_applied=False, paged=None):
+        from repro.kernels.paged_attention import sharded_paged_attention
+        from repro.models import layers as L
+        B, T = q.shape[0], q.shape[1]
+        H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        q = q.reshape(B, T, H, hd)
+        if cfg.pos == 'rope' and not rope_applied:
+            pos_t = pos0[:, None].astype(jnp.int32) \
+                + jnp.arange(T, dtype=jnp.int32)
+            q = L.apply_rope(q, pos_t, rope_theta)
+        qg = q.reshape(B, T, KV, H // KV, hd)
+        (k, v, cp, ks, vs), table = self._as_pages(
+            cache, ('k', 'v', 'pos', 'k_scale', 'v_scale'), window, paged)
+        ctx = sharded_paged_attention(
+            qg, k, v, cp, table, pos0.astype(jnp.int32), mesh=self.mesh,
+            scale=hd ** -0.5, window=window, k_scale_pages=ks,
+            v_scale_pages=vs, interpret=_interpret())
+        return ctx.reshape(B, T, H * hd)
+
+
 # ============================================================== resolution
 REFERENCE = ReferenceBackend()
 PALLAS = PallasBackend()

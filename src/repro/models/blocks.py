@@ -394,9 +394,19 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
     chunked = n_valid is not None
     assert paged is None or chunked, 'paged decode runs the chunked path'
     assert packed is None or chunked, 'packed decode runs the chunked path'
+    # MoE under packing: capacity is derived from the slot-major token
+    # count (identical for the packed (R, T) and unpacked (S, T) grids) and
+    # ties in the dispatch sort break by canonical slot-major lane index,
+    # so routing/drops/accumulation order — and therefore tokens — are
+    # bitwise independent of the packing. Unpacked calls pass nothing and
+    # keep their exact pre-existing dispatch.
+    moe_kw = {}
     if packed is not None:
         lane_mask = packed.lane_valid
         ts, tl = packed.to_slots, packed.to_lanes
+        moe_kw = dict(capacity_tokens=pos.shape[0] * h.shape[1],
+                      lane_order=packed.lane_slot * h.shape[1]
+                      + packed.lane_local)
     else:
         ts = tl = lambda x: x
         if chunked:
@@ -441,7 +451,7 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
             xn2 = L.norm_apply(params['ln2'], h, cfg.norm)
             if use_moe:
                 f, _, drops = moe_apply(params['moe'], xn2, cfg,
-                                        lane_mask=lane_mask)
+                                        lane_mask=lane_mask, **moe_kw)
             else:
                 f, drops = ffn_apply(params['ffn'], xn2, act=cfg.act), zero
             return h + tl(attn_out) + f, state, drops
@@ -465,7 +475,7 @@ def block_decode(params, h: jax.Array, state: Dict, pos: jax.Array,
             f, _, drops = moe_apply(params['moe'], xn2, cfg,
                                     router_mode='softmax_topk'
                                     if cfg.moe.num_shared else 'topk_softmax',
-                                    lane_mask=lane_mask)
+                                    lane_mask=lane_mask, **moe_kw)
         else:
             f, drops = ffn_apply(params['ffn'], xn2, act=cfg.act), zero
         return h + f, state, drops

@@ -23,7 +23,7 @@ Shared experts (DeepSeek) are a dense always-on SwiGLU of width
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -70,7 +70,9 @@ def router_probs(logits: jax.Array, m: MoEConfig, mode: str
 
 def moe_apply(params, x: jax.Array, cfg: ModelConfig, *,
               router_mode: str = 'topk_softmax',
-              lane_mask: Optional[jax.Array] = None
+              lane_mask: Optional[jax.Array] = None,
+              capacity_tokens: Optional[int] = None,
+              lane_order: Optional[jax.Array] = None
               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """x: (B,S,d) -> (y, aux_load_balance_loss, dropped_token_slots).
 
@@ -83,6 +85,20 @@ def moe_apply(params, x: jax.Array, cfg: ModelConfig, *,
     capacity; their output rows are exactly zero. A real token's value is
     independent of its capacity row, so masking is a no-op for outputs
     whenever nothing overflows — the bit-identity contract holds.
+
+    ``capacity_tokens`` (static) overrides the token count the expert
+    capacity is derived from. Serving's segment-packed prefill dispatches
+    a denser (R, T) grid than the slot-major (S, T) layout; passing the
+    *slot-major* token count from both dispatch shapes gives them the same
+    capacity C, which is one half of the packed==unpacked identity.
+
+    ``lane_order`` (B, S) int32 gives each lane a canonical token index
+    (serving passes ``slot * T + local``). The dispatch sort then orders
+    ties within an expert by canonical index instead of grid position, so
+    packed and unpacked grids route, drop, and accumulate real tokens in
+    exactly the same order — the other half of the identity. ``None``
+    keeps the plain stable sort (ties by grid position), which is the same
+    ordering whenever the grid *is* slot-major.
 
     ``dropped_token_slots`` counts (token, k)-routing slots of real tokens
     that overflowed capacity this call — surfaced as
@@ -118,10 +134,22 @@ def moe_apply(params, x: jax.Array, cfg: ModelConfig, *,
     aux = E * jnp.sum(p_mean * frac)
 
     # ---- sort-based dispatch ----
-    C = capacity(N, m)
+    C = capacity(N if capacity_tokens is None else capacity_tokens, m)
     wf = w.reshape(N * k).astype(x.dtype)
     tok = jnp.repeat(jnp.arange(N), k)
-    order = jnp.argsort(ef, stable=True)
+    if lane_order is None:
+        order = jnp.argsort(ef, stable=True)
+    else:
+        # composite key (expert, canonical slot index): slotc < M, so the
+        # sort is by expert first, canonical order within an expert. Null-
+        # expert lanes share canon 0 — stable argsort keeps them
+        # deterministic (and they scatter out of bounds regardless).
+        canon = lane_order.reshape(N).astype(jnp.int32)
+        slotc = (canon[:, None] * k
+                 + jnp.arange(k, dtype=jnp.int32)[None, :]).reshape(N * k)
+        M = jnp.int32((capacity_tokens if capacity_tokens is not None
+                       else N) * k)
+        order = jnp.argsort(ef.astype(jnp.int32) * M + slotc, stable=True)
     e_s, t_s, w_s = ef[order], tok[order], wf[order]
     counts = jnp.zeros((E,), jnp.int32).at[ef].add(1, mode='drop')
     starts = jnp.cumsum(counts) - counts                       # exclusive cumsum

@@ -80,12 +80,70 @@ segment-id mask, and packed tokens are **bitwise identical** to the
 unpacked chunked path (tests/test_packed_prefill.py). The scheduler's
 saving shows up in ``stats()`` as ``prefill_lane_utilization``
 (= lane_tokens / lanes_dispatched) and as the TTFT win in
-``benchmarks/serving_throughput.py --workload bursty``. MoE configs force
-``pack_prefill`` off: expert capacity is a function of the dispatch
-grid's token count, so shrinking the grid would change routing decisions
-and break bit-identity. Composes with paged KV, prefix caching,
-precomputed tables and fused gather→RoPE (per-lane positions ride in
+``benchmarks/serving_throughput.py --workload bursty``. MoE configs
+pack too: expert capacity is a function of the dispatch grid's token
+count, so the packed dispatch pins it to the slot-major count
+(``moe_apply(capacity_tokens=S*T)``) and breaks dispatch-sort ties by a
+canonical slot-major lane index (``lane_order``) — routing decisions,
+capacity drops and combine accumulation order are then identical
+between the packed (R, T) and unpacked (S, T) grids, preserving
+bit-identity. Composes with paged KV, prefix caching, precomputed
+tables and fused gather→RoPE (per-lane positions ride in
 ``PackedLayout.lane_pos``).
+
+**Sharded many-slot serving** (``mesh='PxH'`` string, ``(P, H)`` tuple
+or a ``('pool', 'heads')`` ``jax.sharding.Mesh``): KV storage is laid
+out 2D over the two axes the paged-attention grid already iterates —
+every pool leaf's leading ``num_pages`` axis (and per-slot dense
+state's batch axis) shards over ``'pool'``, and K/V storage's
+``kv_heads`` axis over ``'heads'`` (``repro.sharding.serving_rules``;
+non-divisible dims fall back to replication per leaf). The layout is
+**shard storage, replicate compute**: states live sharded *at rest*
+(the HBM-capacity story — a pool P× too big for one device still fits
+the mesh), every jitted step gathers them to replicated at entry, runs
+the exact single-device math (identical reduction geometry, so tokens
+stay bitwise identical to the unsharded engine — a GSPMD-partitioned
+o_proj contraction would reassociate the fp32 reduction and break
+that), and re-constrains outputs to the sharded layout before
+returning (donation-safe). The one genuinely partitioned compute is
+the Pallas paged-attention kernel: its per-(kv head) grid axis is
+embarrassingly parallel, so
+``kernels.paged_attention.sharded_paged_attention`` shard_maps it over
+``'heads'`` with the page-table / ``pos0`` scalar-prefetch operands
+kept device-local (replicated) — the sharded kernel's output is
+bitwise equal to the unsharded kernel's. Fused in-kernel page
+maintenance is disabled under a mesh (the job-list kernels assume one
+unpartitioned pool pass); maintenance falls back to the exact XLA
+scatter path. ``max_slots`` scales to the hundreds: host args and
+per-slot state leaves are sliced to a power-of-two slot bucket
+(floor 8, capped at ``max_slots``) derived from the highest active
+slot, so jit retraces stay bounded at ~``log2(max_slots)`` shapes and
+an engine with 3 live slots never pays a 256-wide dispatch.
+
+**Async double-buffered host loop** (``async_loop=True``): the
+scheduling work for step N+1 — admission, radix lookups, deadline
+checks, segment bin-packing — overlaps the device compute of step N.
+:meth:`step_once` splits into a schedule/dispatch half and a commit
+half, pipelined one step deep: step N's sampled tokens are committed
+(``np.asarray``, the only device wait) *after* step N+1 has been
+dispatched, and the dispatched program splices each decoding slot's
+previous sampled token in on device (``prev_nxt``/``use_prev``
+arguments), so scheduling never blocks on a transfer. **One-step
+sampling lag is the documented contract**: host-visible request state
+(``generated``, terminations, prompt logits, radix publishes) trails
+the device by exactly one dispatch, and :meth:`run` drains the
+pipeline before returning. Greedy (temperature 0) tokens are bitwise
+identical to the synchronous loop: deterministic terminations
+(``max_new_tokens`` / ``max_seq``) are predicted at schedule time so
+the doomed slot is simply not scheduled, EOS and watchdog terminations
+dispatch one speculative lane whose commit record is then discarded
+(guarded by slot identity + admission sequence number), and a pending
+lane landing exactly on a ring/recurrent snapshot boundary forces a
+pipeline flush before that slot's next chunk so the captured state
+matches the synchronous capture. Temperature > 0 streams are *not*
+bitwise across the two modes (the PRNG split schedule differs);
+greedy decoding is the parity contract
+(``tests/test_sharded_serving.py``).
 
 Logits-on-demand (prompt scoring): a request submitted with
 ``return_logits=True`` gets ``prompt_logits`` filled with the all-position
@@ -174,7 +232,18 @@ lanes consume prompt tokens while others decode):
   this is *host enqueue cost*, not device compute;
 - ``sample_commit`` — the ``np.asarray`` host transfer (this is where the
   device wait lands, keeping the kernel pipeline unsynced), token commit,
-  radix publish, terminations.
+  radix publish, terminations. Under ``async_loop=True`` this phase
+  belongs to the *previous* dispatch (one-step pipeline), and is still
+  charged to that dispatch's ``kind``.
+
+Telemetry-enabled engines also register ``engine.queue.depth`` (a
+callback gauge: requests waiting for a slot at scrape time), and async
+engines the ``engine.step.overlap_s`` histogram (keyed by ``backend``):
+the host scheduling time (host_schedule + radix_lookup + pack_layout)
+of step N+1 spent while step N's dispatch was still uncommitted. The
+sustained-workload benchmark reports
+``sum(overlap_s) / sum(host_schedule + radix_lookup + pack_layout)``
+as its overlap fraction.
 
 **Metric names** live in exactly one place — constants in
 :mod:`repro.serving.telemetry`: ``engine.step.phase_s``,
@@ -300,6 +369,53 @@ def _is_pos_leaf(path) -> bool:
     return jax.tree_util.keystr(path).endswith("['pos']")
 
 
+def _leaf_name(path) -> str:
+    """Innermost string key of a tree path ('k', 'v', 'k_scale', ...)."""
+    for entry in reversed(path):
+        k = getattr(entry, 'key', None)
+        if isinstance(k, str):
+            return k
+    return ''
+
+
+@dataclasses.dataclass
+class _Lane:
+    """Commit record for one dispatched lane (async pipeline): everything
+    the deferred commit needs, captured at dispatch time so later host
+    mutations (preemption, re-admission) cannot skew it. ``admit_seq``
+    plus request identity guards against the slot having been vacated and
+    re-admitted (even by the same request) while the dispatch was in
+    flight — a stale lane's commit record is silently discarded."""
+    slot: int
+    req: Request
+    admit_seq: int
+    consumed: int
+    p_before: int           # stream progress before this dispatch
+    p_after: int            # ... and after
+    pos_after: int          # absolute slot position after this dispatch
+    gen: bool               # commit will append a sampled token
+
+
+@dataclasses.dataclass
+class _PendingStep:
+    """One in-flight dispatch awaiting commit (the one-step-deep async
+    pipeline). ``nxt``/``finite``/``drops``/``logits`` are device arrays —
+    no host transfer happens until :meth:`ServingEngine._commit`."""
+    nxt: jax.Array
+    finite: jax.Array
+    drops: jax.Array
+    logits: Optional[jax.Array]
+    lanes: List[_Lane]
+    pk_row: Optional[np.ndarray]    # packed-grid logit locations (scoring)
+    pk_off: Optional[np.ndarray]
+    nb: int                         # slot bucket this dispatch ran at
+    step_idx: int
+    kind: Optional[str]             # telemetry kind (None with tel. off)
+    times: Optional[tuple]          # (host_schedule, radix, pack, dispatch)
+    needs_sync: bool                # commit captures device state: flush
+                                    # before the slot's next dispatch
+
+
 class ServingEngine:
     def __init__(self, model: Model, params, *, max_slots: int = 8,
                  max_seq: int = 512, precomputed=None, seed: int = 0,
@@ -311,12 +427,30 @@ class ServingEngine:
                  fault_injector: Optional[FaultInjector] = None,
                  admit_retry_steps: int = 8,
                  pack_prefill: bool = False,
-                 telemetry=False):
+                 telemetry=False,
+                 mesh=None,
+                 async_loop: bool = False):
+        from repro.launch.mesh import make_serving_mesh
         from repro.models.attn_backend import get_backend
+        from repro.sharding import serving_rules
         self.model, self.params = model, params
         self.max_slots, self.max_seq = max_slots, max_seq
         self.precomputed = precomputed
+        # ------------------------------------------------- mesh / async loop
+        # mesh: None | 'PxH' | (P, H) | a ('pool','heads') Mesh — resolved
+        # (and ValueError'd on impossible shapes) by make_serving_mesh.
+        self.mesh = make_serving_mesh(mesh)
+        self._rules = serving_rules(self.mesh)
+        self.async_loop = bool(async_loop)
+        self._pending = None            # in-flight dispatch (async pipeline)
         self.attn_backend = get_backend(attn_backend)
+        if self.mesh is not None and self.attn_backend.name == 'pallas':
+            # partition the kernel for real: shard_map over 'heads' (the
+            # kernel's embarrassingly-parallel grid axis — bitwise equal
+            # to the unsharded kernel). Fused maintenance is off under a
+            # mesh; ShardedPallasBackend declares that.
+            from repro.models.attn_backend import ShardedPallasBackend
+            self.attn_backend = ShardedPallasBackend(self.mesh)
         # ------------------------------------------------------ telemetry
         # False/None -> the shared no-op singleton (zero-cost: every hot
         # instrumentation site is guarded by `if tel.enabled`), True -> a
@@ -338,11 +472,16 @@ class ServingEngine:
                     backend=self.attn_backend.name, kind=kind)
                     for ph in TM.PHASES}
                 for kind in TM.STEP_KINDS}
+            tel.registry.gauge(TM.QUEUE_DEPTH, fn=lambda: len(self.queue))
+            self._overlap_h = tel.registry.histogram(
+                TM.STEP_OVERLAP, backend=self.attn_backend.name) \
+                if self.async_loop else None
         else:
             self._lat_hist = TM.Histogram()
             self._ttft_hist = TM.Histogram()
             self._cow_counter = None
             self._phase_h = None
+            self._overlap_h = None
         self._t_radix = 0.0     # radix-lookup seconds within current step
         if model.cfg.arch_class == 'audio':
             chunk_size = 1   # enc-dec decode is one token per step by API
@@ -371,12 +510,13 @@ class ServingEngine:
         self.paged = bool(prefix_cache)
         self.page_size = page_size
         # Segment-packed prefill (see the docstring section): needs a real
-        # chunk grid to pack into, and is gated off for MoE — expert
-        # capacity is derived from the dispatch grid's token count, so
-        # shrinking the grid from (S, T) to (R, T) would change routing
-        # and break the bit-identity contract. Audio never chunks.
+        # chunk grid to pack into. MoE configs pack too — the dispatch pins
+        # expert capacity to the slot-major token count and canonicalises
+        # the dispatch-sort tie order (blocks.block_decode passes
+        # capacity_tokens / lane_order), so shrinking the grid from (S, T)
+        # to (R, T) cannot change routing. Audio never chunks.
         self.pack_prefill = bool(pack_prefill) and chunk_size > 1 \
-            and model.cfg.arch_class != 'audio' and model.cfg.moe is None
+            and model.cfg.arch_class != 'audio'
         # chunk-grid utilization counters (packed-prefill win metric):
         # lanes dispatched vs lanes that actually carried a token
         self.lanes_dispatched = 0
@@ -446,6 +586,17 @@ class ServingEngine:
                 self.states, self._paged_mask)
         else:
             self._fresh = jax.tree_util.tree_map(jnp.array, self.states)
+        if self.mesh is not None:
+            # Shard storage at rest: pool leaves over ('pool', heads over
+            # 'heads'), per-slot leaves over 'pool' on batch. Params and
+            # the reset template are jit arguments -> replicate them
+            # explicitly (`precomputed` is a closure constant; XLA
+            # replicates it on its own).
+            rep = jax.sharding.NamedSharding(self.mesh,
+                                             jax.sharding.PartitionSpec())
+            self.params = jax.device_put(self.params, rep)
+            self._fresh = jax.device_put(self._fresh, rep)
+            self.states = self._place_states(self.states)
         self.slot_req: List[Optional[Request]] = [None] * max_slots
         self.slot_pos = np.zeros(max_slots, np.int64)       # next position
         self.slot_next_tok = np.zeros(max_slots, np.int32)  # token to feed
@@ -478,7 +629,8 @@ class ServingEngine:
         # its fused chunk write (kernels/paged_maintenance). Overflow past
         # _pending_cap (a fixed jit shape) flushes eagerly.
         self._fused_maint = self.paged \
-            and getattr(self.attn_backend, 'fused_maintenance', False)
+            and getattr(self.attn_backend, 'fused_maintenance', False) \
+            and self.mesh is None
         self._pending_clear: List[int] = []
         self._pending_cap = 64
         if self.paged:
@@ -495,6 +647,108 @@ class ServingEngine:
         if self.paged:
             self._build_page_ops()
 
+    # ---------------------------------------------------- mesh state layout
+    def _leaf_axes(self, path, leaf, pooled: bool) -> List[Optional[str]]:
+        """Logical axes for one state leaf under serving_rules: the lead
+        axis (after a 'body' scan axis) is 'pages' for pool leaves /
+        'batch' for per-slot leaves, K/V storage's kv_heads axis maps by
+        leaf name. Non-divisible dims drop to replication downstream
+        (Rules.spec_for_shape)."""
+        lead = 1 if _is_body(path) else 0
+        axes: List[Optional[str]] = [None] * leaf.ndim
+        if leaf.ndim > lead:
+            axes[lead] = 'pages' if pooled else 'batch'
+        name = _leaf_name(path)
+        if name in ('k', 'v') and leaf.ndim - lead >= 3:
+            axes[-2] = 'kv_heads'           # (..., seq/page_tok, KV, hd)
+        elif name in ('k_scale', 'v_scale') and leaf.ndim - lead >= 2:
+            axes[-1] = 'kv_heads'           # (..., seq/page_tok, KV)
+        return axes
+
+    def _state_sharding(self, path, leaf, pooled: bool):
+        return self._rules.sharding_for_shape(
+            leaf.shape, self._leaf_axes(path, leaf, pooled))
+
+    def _map_states(self, states, fn):
+        """tree_map_with_path over states with the pool mask riding along
+        (pooled=False everywhere for dense engines)."""
+        mask = self._paged_mask
+        if mask is None:
+            return jax.tree_util.tree_map_with_path(
+                lambda p, x: fn(p, x, False), states)
+        return jax.tree_util.tree_map_with_path(
+            lambda p, x, m: fn(p, x, bool(m)), states, mask)
+
+    def _place_states(self, states):
+        """device_put every leaf to its at-rest sharded layout."""
+        return self._map_states(
+            states, lambda p, x, m: jax.device_put(
+                x, self._state_sharding(p, x, m)))
+
+    def _rep_in(self, states):
+        """Inside jit: gather sharded storage to replicated at program
+        entry — the 'replicate compute' half of the layout contract (the
+        replicated program runs the exact single-device math, keeping
+        tokens bitwise)."""
+        if self.mesh is None:
+            return states
+        rep = jax.sharding.NamedSharding(self.mesh,
+                                         jax.sharding.PartitionSpec())
+        return jax.tree_util.tree_map(
+            lambda x: jax.lax.with_sharding_constraint(x, rep), states)
+
+    def _shard_out(self, states):
+        """Inside jit: re-constrain program outputs to the at-rest sharded
+        layout (keeps donation aliasing clean and storage sharded)."""
+        if self.mesh is None:
+            return states
+        return self._map_states(
+            states, lambda p, x, m: jax.lax.with_sharding_constraint(
+                x, self._state_sharding(p, x, m)))
+
+    # -------------------------------------------------------- slot buckets
+    def _bucket(self, active: List[int]) -> int:
+        """Power-of-two slot-count bucket covering the highest active slot
+        (floor 8, capped at max_slots). Engines with max_slots <= 8 always
+        run the full width — their HLO is untouched by bucketing."""
+        S = self.max_slots
+        if S <= 8 or not active:
+            return S
+        nb = 8
+        hi = max(active) + 1
+        while nb < hi:
+            nb *= 2
+        return min(nb, S)
+
+    def _slice_states(self, states, nb: int):
+        """Inside jit: per-slot leaves sliced to the slot bucket (pool
+        leaves pass whole — pages are slot-agnostic). nb == max_slots is
+        the identity, so default-bucket programs trace exactly the
+        historical HLO."""
+        if nb == self.max_slots:
+            return states
+
+        def one(path, leaf, pooled):
+            if pooled:
+                return leaf
+            return leaf[:, :nb] if _is_body(path) else leaf[:nb]
+        return self._map_states(states, one)
+
+    def _merge_states(self, full, part, nb: int):
+        """Inside jit: write the bucket's updated per-slot rows back into
+        the full-width (donated) buffers."""
+        if nb == self.max_slots:
+            return part
+        mask = self._paged_mask
+
+        def one(path, f, p, *m):
+            if m and m[0]:
+                return p
+            return f.at[:, :nb].set(p) if _is_body(path) else f.at[:nb].set(p)
+        if mask is None:
+            return jax.tree_util.tree_map_with_path(one, full, part)
+        return jax.tree_util.tree_map_with_path(one, full, part, mask)
+
     # ----------------------------------------------------------- programs
     def _build_programs(self) -> None:
         model, precomputed = self.model, self.precomputed
@@ -506,33 +760,77 @@ class ServingEngine:
                 return None
             return A.PageTables(pt, rt, sc_ring, pending)
 
-        def step(params, states, tokens, pos, key, temps, lane_valid):
-            logits, states, stats = model.decode_step(
-                params, tokens, states, pos, precomputed=precomputed,
+        def feed_prev(tokens, prev_nxt, use_prev, packed=None):
+            # async pipeline: splice the previous dispatch's sampled token
+            # into each decoding lane on device (the host value is one
+            # step stale by contract). prev_nxt may come from a different
+            # slot bucket — pad/slice to this dispatch's width; slots past
+            # the old width can't have a pending token (use_prev False).
+            # None (sync mode / empty pipeline) traces to the exact
+            # historical program.
+            if prev_nxt is None:
+                return tokens
+            nb = use_prev.shape[0]
+            pn = prev_nxt.astype(jnp.int32)
+            if pn.shape[0] < nb:
+                pn = jnp.pad(pn, (0, nb - pn.shape[0]))
+            elif pn.shape[0] > nb:
+                pn = pn[:nb]
+            if packed is None:
+                return tokens.at[:, 0].set(
+                    jnp.where(use_prev, pn, tokens[:, 0]))
+            # packed grid: slot s's decode singleton sits at lane
+            # (seg_row[s], seg_off[s]); non-pending slots scatter out of
+            # bounds (idx == R*T) so they can never collide with lane 0
+            R, T = tokens.shape
+            idx = jnp.where(use_prev,
+                            packed.seg_row * T + packed.seg_off,
+                            jnp.int32(R * T))
+            flat = tokens.reshape(R * T)
+            flat = flat.at[idx].set(jnp.where(use_prev, pn, 0), mode='drop')
+            return flat.reshape(R, T)
+
+        def step(params, states, tokens, pos, key, temps, lane_valid,
+                 prev_nxt=None, use_prev=None):
+            states = self._rep_in(states)
+            sub = self._slice_states(states, lane_valid.shape[0])
+            tokens = feed_prev(tokens, prev_nxt, use_prev)
+            logits, sub, stats = model.decode_step(
+                params, tokens, sub, pos, precomputed=precomputed,
                 lane_valid=lane_valid, return_stats=True,
                 attn_backend=backend)
             nxt = sample_tokens(logits[:, 0], key, temps)
             # NaN/Inf watchdog: per-lane finiteness of the sampled logits
             finite = jnp.all(jnp.isfinite(logits), axis=(1, 2))
-            return states, nxt, stats['moe_drops'], finite
+            states = self._merge_states(states, sub, lane_valid.shape[0])
+            return self._shard_out(states), nxt, stats['moe_drops'], finite
 
         self._step = jax.jit(step, donate_argnums=1)
 
-        def step_logits(params, states, tokens, pos, key, temps, lane_valid):
-            logits, states, stats = model.decode_step(
-                params, tokens, states, pos, precomputed=precomputed,
+        def step_logits(params, states, tokens, pos, key, temps, lane_valid,
+                        prev_nxt=None, use_prev=None):
+            states = self._rep_in(states)
+            sub = self._slice_states(states, lane_valid.shape[0])
+            tokens = feed_prev(tokens, prev_nxt, use_prev)
+            logits, sub, stats = model.decode_step(
+                params, tokens, sub, pos, precomputed=precomputed,
                 lane_valid=lane_valid, return_stats=True,
                 attn_backend=backend)
             nxt = sample_tokens(logits[:, 0], key, temps)
             finite = jnp.all(jnp.isfinite(logits), axis=(1, 2))
-            return states, nxt, stats['moe_drops'], finite, logits  # (B,1,V)
+            states = self._merge_states(states, sub, lane_valid.shape[0])
+            return self._shard_out(states), nxt, stats['moe_drops'], \
+                finite, logits                                   # (B,1,V)
 
         self._step_logits = jax.jit(step_logits, donate_argnums=1)
 
         def chunk_hidden(params, states, tokens, pos, n_valid, key, temps,
-                         pt, rt, pending):
-            h, states, stats = model.decode_step(
-                params, tokens, states, pos, precomputed=precomputed,
+                         pt, rt, pending, prev_nxt, use_prev):
+            states = self._rep_in(states)
+            sub = self._slice_states(states, n_valid.shape[0])
+            tokens = feed_prev(tokens, prev_nxt, use_prev)
+            h, sub, stats = model.decode_step(
+                params, tokens, sub, pos, precomputed=precomputed,
                 n_valid=n_valid, return_hidden=True,
                 fused_gather_rope=self.fused_gather_rope,
                 paged=paged_tables(pt, rt, pending), return_stats=True,
@@ -543,24 +841,28 @@ class ServingEngine:
             logits = lm_logits(params, h_last, model.cfg)
             nxt = sample_tokens(logits[:, 0], key, temps)
             finite = jnp.all(jnp.isfinite(logits), axis=(1, 2))
-            return h, states, nxt, stats['moe_drops'], finite
+            states = self._merge_states(states, sub, n_valid.shape[0])
+            return h, self._shard_out(states), nxt, \
+                stats['moe_drops'], finite
 
         def chunk_step(params, states, tokens, pos, n_valid, key, temps,
-                       pt=None, rt=None, pending=None):
+                       pt=None, rt=None, pending=None, prev_nxt=None,
+                       use_prev=None):
             _, states, nxt, drops, finite = chunk_hidden(
                 params, states, tokens, pos, n_valid, key, temps, pt, rt,
-                pending)
+                pending, prev_nxt, use_prev)
             return states, nxt, drops, finite
 
         def chunk_step_logits(params, states, tokens, pos, n_valid, key,
-                              temps, pt=None, rt=None, pending=None):
+                              temps, pt=None, rt=None, pending=None,
+                              prev_nxt=None, use_prev=None):
             # logits-on-demand: same sampled-token program as chunk_step
             # (last-valid-lane head), plus the lm_head on EVERY lane for
             # prompt scoring — padding lanes (t >= n_valid) are garbage and
             # dropped host-side.
             h, states, nxt, drops, finite = chunk_hidden(
                 params, states, tokens, pos, n_valid, key, temps, pt, rt,
-                pending)
+                pending, prev_nxt, use_prev)
             return states, nxt, drops, finite, lm_logits(params, h, model.cfg)
 
         # paged mode always runs the chunk-shaped program (its T == 1 case
@@ -573,12 +875,15 @@ class ServingEngine:
             if want_chunk else None
 
         def packed_hidden(params, states, tokens, pos, n_valid, packed, key,
-                          temps, pt, rt, pending):
+                          temps, pt, rt, pending, prev_nxt, use_prev):
             # segment-packed prefill: tokens is the bin-packed (R, T) grid,
             # pos/n_valid/states stay slot-major (S,). Each slot's last
             # valid hidden lives at lane (seg_row, seg_off + n_valid - 1).
-            h, states, stats = model.decode_step(
-                params, tokens, states, pos, precomputed=precomputed,
+            states = self._rep_in(states)
+            sub = self._slice_states(states, n_valid.shape[0])
+            tokens = feed_prev(tokens, prev_nxt, use_prev, packed)
+            h, sub, stats = model.decode_step(
+                params, tokens, sub, pos, precomputed=precomputed,
                 n_valid=n_valid, return_hidden=True,
                 fused_gather_rope=self.fused_gather_rope,
                 paged=paged_tables(pt, rt, pending), packed=packed,
@@ -591,22 +896,26 @@ class ServingEngine:
             logits = lm_logits(params, h_last, model.cfg)
             nxt = sample_tokens(logits[:, 0], key, temps)
             finite = jnp.all(jnp.isfinite(logits), axis=(1, 2))
-            return h, states, nxt, stats['moe_drops'], finite
+            states = self._merge_states(states, sub, n_valid.shape[0])
+            return h, self._shard_out(states), nxt, \
+                stats['moe_drops'], finite
 
         def packed_step(params, states, tokens, pos, n_valid, packed, key,
-                        temps, pt=None, rt=None, pending=None):
+                        temps, pt=None, rt=None, pending=None,
+                        prev_nxt=None, use_prev=None):
             _, states, nxt, drops, finite = packed_hidden(
                 params, states, tokens, pos, n_valid, packed, key, temps,
-                pt, rt, pending)
+                pt, rt, pending, prev_nxt, use_prev)
             return states, nxt, drops, finite
 
         def packed_step_logits(params, states, tokens, pos, n_valid, packed,
-                               key, temps, pt=None, rt=None, pending=None):
+                               key, temps, pt=None, rt=None, pending=None,
+                               prev_nxt=None, use_prev=None):
             # packed scoring: the lm_head on every packed lane — slot s's
             # prompt logits live at row seg_row[s], cols seg_off[s]..+n_valid
             h, states, nxt, drops, finite = packed_hidden(
                 params, states, tokens, pos, n_valid, packed, key, temps,
-                pt, rt, pending)
+                pt, rt, pending, prev_nxt, use_prev)
             return states, nxt, drops, finite, \
                 lm_logits(params, h, model.cfg)
 
@@ -629,8 +938,10 @@ class ServingEngine:
                 return jax.lax.dynamic_update_slice_in_dim(leaf, row, slot,
                                                            axis=axis)
             if mask is None:
-                return jax.tree_util.tree_map_with_path(one, states, fresh)
-            return jax.tree_util.tree_map_with_path(one, states, fresh, mask)
+                return self._shard_out(
+                    jax.tree_util.tree_map_with_path(one, states, fresh))
+            return self._shard_out(
+                jax.tree_util.tree_map_with_path(one, states, fresh, mask))
 
         self._reset = jax.jit(reset, donate_argnums=0)
 
@@ -651,7 +962,8 @@ class ServingEngine:
                 if _is_body(path):
                     return leaf.at[:, pages].set(val, mode='drop')
                 return leaf.at[pages].set(val, mode='drop')
-            return jax.tree_util.tree_map_with_path(one, states, mask)
+            return self._shard_out(
+                jax.tree_util.tree_map_with_path(one, states, mask))
 
         self._clear_pages = jax.jit(clear, donate_argnums=0)
 
@@ -675,7 +987,8 @@ class ServingEngine:
                 if body:
                     return leaf.at[:, dst].set(row)
                 return leaf.at[dst].set(row)
-            return jax.tree_util.tree_map_with_path(one, states, mask)
+            return self._shard_out(
+                jax.tree_util.tree_map_with_path(one, states, mask))
 
         def cow_pallas(states, src, dst, rem):
             # same contract as `cow`, as a page-to-page DMA kernel: each
@@ -726,7 +1039,8 @@ class ServingEngine:
                 axis = 1 if _is_body(path) else 0
                 return jax.lax.dynamic_update_slice_in_dim(
                     leaf, jnp.expand_dims(sn, axis), slot, axis=axis)
-            return jax.tree_util.tree_map_with_path(one, states, snap, mask)
+            return self._shard_out(
+                jax.tree_util.tree_map_with_path(one, states, snap, mask))
 
         self._restore = jax.jit(restore, donate_argnums=0)
 
@@ -1337,20 +1651,77 @@ class ServingEngine:
         return ptoks, layout, seg_row, seg_off
 
     def step_once(self) -> None:
+        """One engine tick. Synchronous mode dispatches and commits in the
+        same tick (the historical behavior, value-identical). Async mode
+        (``async_loop=True``) dispatches tick N's work, then commits tick
+        N-1's pending dispatch — the one-step-deep pipeline documented in
+        the module docstring."""
         self.ticks += 1
         tel = self.telemetry
         obs = tel.enabled
         if obs:
             self._t_radix = 0.0
-            _t0 = tel.now()
+        _t0 = tel.now() if obs else 0.0
         if self.fault_injector is not None:
             self.fault_injector.before_step(self)
         self._check_deadlines()
+        if self._pending is not None and self._pending.needs_sync:
+            # a pending lane landed exactly on a snapshot boundary: its
+            # commit captures device state, so it must land before the
+            # slot's next chunk is dispatched
+            self._flush_async()
         self._admit()
+        rec = self._schedule_dispatch(_t0, obs)
+        if self.async_loop:
+            prev, self._pending = self._pending, rec
+            if prev is not None:
+                self._commit(prev)
+        elif rec is not None:
+            self._commit(rec)
+
+    def _flush_async(self) -> None:
+        """Drain the async pipeline: commit the pending dispatch (if any).
+        Re-entrancy-safe — the pending slot is cleared before committing."""
+        rec, self._pending = self._pending, None
+        if rec is not None:
+            self._commit(rec)
+
+    def _schedule_dispatch(self, _t0: float,
+                           obs: bool) -> Optional[_PendingStep]:
+        """Build, stage and dispatch one step's lanes; advance host-side
+        scheduling state (slot positions); return the commit record.
+        Returns None when nothing was dispatched. Does NOT transfer any
+        device value to the host."""
+        tel = self.telemetry
         active = [s for s in range(self.max_slots)
                   if self.slot_req[s] is not None]
+        pend = self._pending
+        use_prev = None
+        if pend is not None:
+            # One dispatch is in flight. Decoding slots whose pending lane
+            # samples a token get it spliced in on device (use_prev);
+            # deterministic terminations (max_new_tokens / max_seq) are
+            # predictable one step ahead, so the doomed slot is simply not
+            # scheduled — EOS / watchdog terminations dispatch one
+            # speculative lane whose commit record is later discarded.
+            use_prev = np.zeros(self.max_slots, bool)
+            skip = set()
+            for ln in pend.lanes:
+                s = ln.slot
+                if self.slot_req[s] is not ln.req \
+                        or int(self.slot_admit_seq[s]) != ln.admit_seq \
+                        or not ln.gen:
+                    continue
+                use_prev[s] = True
+                if len(ln.req.generated) + 1 >= ln.req.max_new_tokens \
+                        or int(self.slot_pos[s]) + 1 >= self.max_seq:
+                    skip.add(s)
+            if skip:
+                active = [s for s in active if s not in skip]
+                for s in skip:
+                    use_prev[s] = False
         if not active:
-            return
+            return None
         step_idx = self.steps
         prefilling = self.chunk_size > 1 and any(
             len(self.slot_stream[s]) - self._progress(s) > 1
@@ -1401,10 +1772,15 @@ class ServingEngine:
                 if self.slot_req[s] is None and n_valid[s]:
                     tokens[s] = 0
                     n_valid[s] = 0
+            if use_prev is not None:
+                # preemptions above may have vacated pending-token slots
+                for s in range(self.max_slots):
+                    if self.slot_req[s] is None:
+                        use_prev[s] = False
             active = [s for s in active
                       if self.slot_req[s] is not None and n_valid[s] > 0]
             if not active:
-                return            # everything was preempted this step
+                return None       # everything was preempted this step
             # _ensure_blocks may have preempted the slots that justified the
             # expensive program choices above — recompute from the surviving
             # lanes: a step whose only scoring slot was preempted must NOT
@@ -1430,10 +1806,16 @@ class ServingEngine:
                 kind = ('mixed' if 0 < n_pre < len(active)
                         else ('prefill' if n_pre else 'decode'))
                 _t1 = tel.now()
+            nb = self._bucket(active)
+            tokens, n_valid = tokens[:nb], n_valid[:nb]
             temps = jnp.asarray([
                 (self.slot_req[s].temperature if self.slot_req[s] else 0.0)
-                for s in range(self.max_slots)], jnp.float32)
-            pos = jnp.asarray(self.slot_pos.astype(np.int32))
+                for s in range(nb)], jnp.float32)
+            pos = jnp.asarray(self.slot_pos[:nb].astype(np.int32))
+            kw = {}
+            if pend is not None:
+                kw = dict(prev_nxt=pend.nxt,
+                          use_prev=jnp.asarray(use_prev[:nb]))
             if self.pack_prefill and prefilling:
                 ptoks, playout, pk_row, pk_off = \
                     self._pack_layout(tokens, n_valid)
@@ -1442,15 +1824,17 @@ class ServingEngine:
                 args = [self.params, self.states, jnp.asarray(ptoks), pos,
                         jnp.asarray(n_valid), playout, sub, temps]
                 if self.paged:
-                    args += [jnp.asarray(self._pt), jnp.asarray(self._rt),
+                    args += [jnp.asarray(self._pt[:nb]),
+                             jnp.asarray(self._rt[:nb]),
                              self._pending_array()]
                 if obs:
                     _t2 = tel.now()
                 if want_logits:
                     self.states, nxt, drops, finite, logits = \
-                        self._packed_step_logits(*args)
+                        self._packed_step_logits(*args, **kw)
                 else:
-                    self.states, nxt, drops, finite = self._packed_step(*args)
+                    self.states, nxt, drops, finite = \
+                        self._packed_step(*args, **kw)
                 self._pending_clear = []
             else:
                 self.lanes_dispatched += int(tokens.size)
@@ -1458,15 +1842,17 @@ class ServingEngine:
                 args = [self.params, self.states, jnp.asarray(tokens), pos,
                         jnp.asarray(n_valid), sub, temps]
                 if self.paged:
-                    args += [jnp.asarray(self._pt), jnp.asarray(self._rt),
+                    args += [jnp.asarray(self._pt[:nb]),
+                             jnp.asarray(self._rt[:nb]),
                              self._pending_array()]
                 if obs:
                     _t2 = tel.now()
                 if want_logits:
                     self.states, nxt, drops, finite, logits = \
-                        self._chunk_step_logits(*args)
+                        self._chunk_step_logits(*args, **kw)
                 else:
-                    self.states, nxt, drops, finite = self._chunk_step(*args)
+                    self.states, nxt, drops, finite = \
+                        self._chunk_step(*args, **kw)
                 self._pending_clear = []
             consumed = n_valid
         else:
@@ -1481,41 +1867,93 @@ class ServingEngine:
                 kind = ('mixed' if 0 < n_pre < len(active)
                         else ('prefill' if n_pre else 'decode'))
                 _t1 = tel.now()
+            nb = self._bucket(active)
             temps = jnp.asarray([
                 (self.slot_req[s].temperature if self.slot_req[s] else 0.0)
-                for s in range(self.max_slots)], jnp.float32)
-            pos = jnp.asarray(self.slot_pos.astype(np.int32))
-            tokens = jnp.asarray(self.slot_next_tok[:, None])
-            lane_valid = jnp.asarray(np.asarray(
-                [self.slot_req[s] is not None
-                 for s in range(self.max_slots)], bool))
+                for s in range(nb)], jnp.float32)
+            pos = jnp.asarray(self.slot_pos[:nb].astype(np.int32))
+            tokens = jnp.asarray(self.slot_next_tok[:nb, None])
+            lv = np.zeros(nb, bool)
+            lv[active] = True
+            lane_valid = jnp.asarray(lv)
             args = (self.params, self.states, tokens, pos, sub, temps,
                     lane_valid)
+            kw = {}
+            if pend is not None:
+                kw = dict(prev_nxt=pend.nxt,
+                          use_prev=jnp.asarray(use_prev[:nb]))
             if obs:
                 _t2 = tel.now()
             if want_logits:
                 self.states, nxt, drops, finite, logits = \
-                    self._step_logits(*args)
+                    self._step_logits(*args, **kw)
             else:
-                self.states, nxt, drops, finite = self._step(*args)
+                self.states, nxt, drops, finite = self._step(*args, **kw)
+            n_valid = None
             consumed = np.ones(self.max_slots, np.int32)
 
         if obs:
             _t3 = tel.now()
-        nxt = np.asarray(nxt)
-        bad = ~np.asarray(finite)
-        if self.fault_injector is not None:
-            for s in self.fault_injector.poison_lanes(self, step_idx):
-                if 0 <= s < self.max_slots:
-                    bad[s] = True
-        self.moe_token_drops += int(drops)
-        if logits is not None:
-            logits = np.asarray(logits)
-        self.steps += 1
+        # advance host scheduling state NOW (dispatch time): async mode
+        # schedules the next step from these positions before the commit
+        # lands. Everything the deferred commit needs is recorded per lane.
+        lanes: List[_Lane] = []
+        needs_sync = False
         for s in active:
             req = self.slot_req[s]
-            if req is None:
-                continue
+            c = int(consumed[s])
+            stream = self.slot_stream[s]
+            p_before = self._progress(s)
+            self.slot_pos[s] += c
+            p_after = self._progress(s)
+            lanes.append(_Lane(
+                slot=s, req=req, admit_seq=int(self.slot_admit_seq[s]),
+                consumed=c, p_before=p_before, p_after=p_after,
+                pos_after=int(self.slot_pos[s]),
+                gen=p_after >= len(stream)))
+            if self.paged and self._needs_snapshot \
+                    and int(self.slot_insert_at[s]) >= 0 \
+                    and p_after == int(self.slot_insert_at[s]):
+                needs_sync = True
+        self.steps += 1
+        times = None
+        if obs:
+            times = (max(0.0, _t1 - _t0 - self._t_radix), self._t_radix,
+                     _t2 - _t1, _t3 - _t2)
+            if self._overlap_h is not None and pend is not None:
+                # host scheduling work performed while the previous
+                # dispatch was still uncommitted — the double-buffering win
+                self._overlap_h.observe(max(0.0, _t2 - _t0))
+        return _PendingStep(
+            nxt=nxt, finite=finite, drops=drops, logits=logits,
+            lanes=lanes, pk_row=pk_row, pk_off=pk_off, nb=nb,
+            step_idx=step_idx, kind=kind if obs else None, times=times,
+            needs_sync=needs_sync)
+
+    def _commit(self, rec: _PendingStep) -> None:
+        """Commit one dispatched step: the ``np.asarray`` device wait,
+        per-lane token/logit commit, radix publishes and terminations.
+        Stale lanes — the slot was vacated (cancel, deadline, preemption,
+        EOS misprediction) or re-admitted while the dispatch was in
+        flight — are discarded by the (request identity, admit_seq)
+        guard; their device work is wasted but harmless (masked lanes /
+        pages freed after the in-order device writes)."""
+        tel = self.telemetry
+        obs = tel.enabled and rec.kind is not None
+        _t3 = tel.now() if obs else 0.0
+        nxt = np.asarray(rec.nxt)
+        bad = ~np.asarray(rec.finite)
+        if self.fault_injector is not None:
+            for s in self.fault_injector.poison_lanes(self, rec.step_idx):
+                if 0 <= s < len(bad):
+                    bad[s] = True
+        self.moe_token_drops += int(rec.drops)
+        logits = None if rec.logits is None else np.asarray(rec.logits)
+        for ln in rec.lanes:
+            s, req = ln.slot, ln.req
+            if self.slot_req[s] is not req \
+                    or int(self.slot_admit_seq[s]) != ln.admit_seq:
+                continue                 # stale speculative lane: discard
             if bad[s]:
                 # NaN/Inf watchdog: fail only the offending lane — its
                 # cache rows are garbage, but they free with the slot
@@ -1524,28 +1962,26 @@ class ServingEngine:
                                 'nonfinite_logits')
                 continue
             stream = self.slot_stream[s]
-            p_before = self._progress(s)
-            self.slot_pos[s] += int(consumed[s])
-            p = self._progress(s)                    # progress within stream
             if self.paged:
-                self._maybe_insert(s, p_before, p)
-            if req.return_logits and p_before < len(stream):
-                # lanes 0..consumed-1 hold logits for stream[p_before..p-1];
-                # copy so the slice doesn't pin the whole step's (B,T,V)
-                # array in memory for the rest of the prefill. In a packed
-                # dispatch the slot's lanes sit at (pk_row[s], pk_off[s]..).
-                if pk_row is not None:
-                    row, off = int(pk_row[s]), int(pk_off[s])
+                self._maybe_insert(s, ln.p_before, ln.p_after)
+            if req.return_logits and ln.p_before < len(stream):
+                # lanes 0..consumed-1 hold logits for
+                # stream[p_before..p_after-1]; copy so the slice doesn't
+                # pin the whole step's (B,T,V) array in memory for the
+                # rest of the prefill. In a packed dispatch the slot's
+                # lanes sit at (pk_row[s], pk_off[s]..).
+                if rec.pk_row is not None:
+                    row, off = int(rec.pk_row[s]), int(rec.pk_off[s])
                     req._logit_chunks.append(
-                        logits[row, off:off + int(consumed[s])].copy())
+                        logits[row, off:off + ln.consumed].copy())
                 else:
                     req._logit_chunks.append(
-                        logits[s, :int(consumed[s])].copy())
-                if p >= len(stream):
+                        logits[s, :ln.consumed].copy())
+                if ln.p_after >= len(stream):
                     req.prompt_logits = np.concatenate(req._logit_chunks, 0)
                     req._logit_chunks = []
-            if p < len(stream):                      # still prefilling
-                self.slot_next_tok[s] = int(stream[p])
+            if ln.p_after < len(stream):             # still prefilling
+                self.slot_next_tok[s] = int(stream[ln.p_after])
                 continue
             req.status = RequestStatus.DECODING
             tok = int(nxt[s])
@@ -1553,28 +1989,32 @@ class ServingEngine:
                 req.first_token_t = time.monotonic()
                 if obs:
                     tel.event(req.uid, TM.EV_FIRST_TOKEN,
-                              t=req.first_token_t, step=step_idx, token=tok)
+                              t=req.first_token_t, step=rec.step_idx,
+                              token=tok)
             elif obs:
                 tel.event(req.uid, TM.EV_DECODE_STEP,
-                          step=step_idx, token=tok)
+                          step=rec.step_idx, token=tok)
             req.generated.append(tok)
             self.slot_next_tok[s] = tok
             hit_eos = req.eos_id is not None and tok == req.eos_id
             if hit_eos or len(req.generated) >= req.max_new_tokens \
-                    or int(self.slot_pos[s]) + 1 >= self.max_seq:
+                    or ln.pos_after + 1 >= self.max_seq:
                 self._vacate(s)
                 self._terminate(req, RequestStatus.FINISHED)
         if obs:
             # Phase accounting for this dispatch (see the Observability
             # section of the module docstring for the taxonomy). The device
             # wait lands in sample_commit via the np.asarray(nxt) transfer;
-            # no sync points are added.
+            # no sync points are added. In async mode the schedule-side
+            # phases were measured at dispatch time (rec.times) and
+            # sample_commit is measured here, one step later.
             _t4 = tel.now()
-            ph = self._phase_h[kind]
-            ph['host_schedule'].observe(max(0.0, _t1 - _t0 - self._t_radix))
-            ph['radix_lookup'].observe(self._t_radix)
-            ph['pack_layout'].observe(_t2 - _t1)
-            ph['dispatch'].observe(_t3 - _t2)
+            ph = self._phase_h[rec.kind]
+            hs, rx, pk, dp = rec.times
+            ph['host_schedule'].observe(hs)
+            ph['radix_lookup'].observe(rx)
+            ph['pack_layout'].observe(pk)
+            ph['dispatch'].observe(dp)
             ph['sample_commit'].observe(_t4 - _t3)
 
     def run(self, max_iters: int = 100_000) -> Dict[str, int]:
@@ -1587,8 +2027,8 @@ class ServingEngine:
         was abandoned (requests still occupying slots keep their state and
         resume on the next ``run()`` call)."""
         it = 0
-        while (self.queue or any(r is not None for r in self.slot_req)) \
-                and it < max_iters:
+        while (self.queue or any(r is not None for r in self.slot_req)
+               or self._pending is not None) and it < max_iters:
             self.step_once()
             it += 1
         stalled = 0

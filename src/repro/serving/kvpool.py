@@ -47,6 +47,32 @@ from repro.serving.telemetry import NULL_TELEMETRY
 NULL_PAGE = 0     # physical page 0 is reserved: all-zero K/V, pos == -1
 
 
+def partition_pages(num_pages: int, pool_shards: int) -> List[range]:
+    """Block-partition physical page ids over ``pool_shards`` mesh shards.
+
+    Mirrors exactly how GSPMD lays a leading ``num_pages`` axis out over the
+    serving mesh's ``'pool'`` axis: shard ``i`` owns the contiguous block
+    ``[i * num_pages / S, (i + 1) * num_pages / S)``. The partition is a
+    bijection onto ``range(num_pages)`` — every physical page lives on
+    exactly one shard (pinned by a hypothesis property in
+    ``tests/test_sharded_serving.py``), which is what makes host-side page
+    accounting (allocator, radix index, eviction) shard-oblivious: policy
+    decisions never need to know where a page's storage physically sits.
+
+    Raises :class:`ValueError` when ``pool_shards`` is non-positive or does
+    not divide ``num_pages`` (the engine's sharding rules fall back to
+    replication in that case, so an uneven partition is never meaningful).
+    """
+    if pool_shards < 1:
+        raise ValueError(f'pool_shards must be positive, got {pool_shards}')
+    if num_pages % pool_shards:
+        raise ValueError(f'{num_pages} pages do not divide over '
+                         f'{pool_shards} pool shards (GSPMD would pad; the '
+                         f'serving rules replicate instead)')
+    per = num_pages // pool_shards
+    return [range(i * per, (i + 1) * per) for i in range(pool_shards)]
+
+
 class RadixNode:
     """One cached ``page_size``-token block of some prompt prefix."""
     __slots__ = ('key', 'page', 'parent', 'children', 'refs', 'last_used',

@@ -77,6 +77,17 @@ PHASES = ('host_schedule', 'radix_lookup', 'pack_layout', 'dispatch',
           'sample_commit')
 STEP_KINDS = ('prefill', 'decode', 'mixed')
 
+# engine.step.overlap_s{backend=} — host-side scheduling work (the
+# host_schedule + radix_lookup + pack_layout phases of step N+1) performed
+# while step N's device dispatch is still in flight, i.e. before its
+# sample_commit transfer. Observed only by the async double-buffered loop;
+# the synchronous loop never emits it. overlap fraction =
+# sum(overlap_s) / sum(those three phases).
+STEP_OVERLAP = 'engine.step.overlap_s'
+# engine.queue.depth — callback gauge: requests waiting for a slot right
+# now (admission queue length, excluding requests already in flight).
+QUEUE_DEPTH = 'engine.queue.depth'
+
 REQUEST_LATENCY = 'request.latency_s'     # submit -> finish, FINISHED only
 REQUEST_TTFT = 'request.ttft_s'           # submit -> first sampled token
 

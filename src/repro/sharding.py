@@ -129,6 +129,30 @@ def default_rules(mesh: Optional[Mesh] = None, *, batch_axes: MeshAxes = 'data',
     return Rules(table, mesh)
 
 
+def serving_rules(mesh: Optional[Mesh] = None) -> Rules:
+    """Rules for the serving engine's ``('pool', 'heads')`` mesh.
+
+    The layout is 2D over the two axes the paged-attention grid already
+    iterates: the KV **page pool** dimension (every paged layer's leading
+    ``num_pages`` axis, plus per-slot dense state's batch axis) maps to
+    ``'pool'``, and the **kv_heads** dimension of K/V storage maps to
+    ``'heads'``. Everything else — params, page tables (scalar-prefetch
+    operands stay device-local/replicated), token/positions/PRNG scalars —
+    is replicated. Divisibility fallback comes from
+    :meth:`Rules.spec_for_shape` as usual: a config whose kv_heads don't
+    divide the heads axis simply replicates that dimension.
+    """
+    table: Dict[str, MeshAxes] = {
+        'pages': 'pool',              # global pool's physical-page axis
+        'batch': 'pool',              # per-slot dense caches / state rows
+        'kv_heads': 'heads',
+        'seq': None,
+        'page_tok': None,             # within-page token axis
+        'head_dim': None,
+    }
+    return Rules(table, mesh)
+
+
 def logical_sds(shape: Sequence[int], dtype, logical_axes: Sequence[Optional[str]],
                 rules: Rules) -> jax.ShapeDtypeStruct:
     """ShapeDtypeStruct carrying the NamedSharding implied by the rules

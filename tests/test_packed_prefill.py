@@ -225,16 +225,20 @@ def test_packed_layout_gather_scatter_roundtrip():
 
 
 # ------------------------------------------------------- gating + metrics
-def test_moe_config_forces_pack_off():
-    """Expert capacity derives from the dispatch grid's token count, so a
-    packed grid would change MoE routing: the engine must silently force
-    pack_prefill off for MoE configs and still serve correctly."""
+def test_moe_config_keeps_pack_on():
+    """Expert capacity is now accounted per slot (capacity_tokens slot-major
+    over the packed layout's lane_order), so a packed grid routes and drops
+    identically to the unpacked one and MoE configs keep pack_prefill ON —
+    the engine must honour the flag and still serve correctly.
+    (Inverts the pre-per-slot-capacity contract, where MoE silently forced
+    packing off; bitwise packed-vs-unpacked MoE parity is pinned in
+    tests/test_sharded_serving.py.)"""
     cfg = get_smoke_config('mixtral_8x7b')
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     eng = ServingEngine(model, params, max_slots=2, max_seq=32, chunk_size=4,
                         pack_prefill=True)
-    assert not eng.pack_prefill
+    assert eng.pack_prefill
     req = Request(uid=0, prompt=np.asarray([5, 6, 7, 8, 9], np.int32),
                   max_new_tokens=3)
     eng.submit(req)
